@@ -1,0 +1,38 @@
+"""Render the 40-cell roofline table from dry-run artifacts (deliverable g)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def run() -> list[str]:
+    rows = [
+        "roofline.arch,shape,mesh,dominant,compute_ms,memory_ms,"
+        "memory_raw_ms,coll_ms,mfu,useful_flop_ratio,status"
+    ]
+    if not os.path.isdir(ART):
+        rows.append("(no dry-run artifacts; run python -m repro.launch.dryrun --all)")
+        return rows
+    for name in sorted(os.listdir(ART)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(ART, name)) as f:
+            d = json.load(f)
+        if d["status"] != "ok" or "compute_s" not in d:
+            status = d["status"] if d["status"] != "ok" else "ok(gate-only)"
+            rows.append(
+                f"{d.get('arch', '?')},{d.get('shape', '?')},"
+                f"{d.get('mesh', '?')},,,,,,,,{status}"
+            )
+            continue
+        rows.append(
+            f"{d['arch']},{d['shape']},{d['mesh']},{d['dominant']},"
+            f"{d['compute_s'] * 1e3:.2f},{d['memory_s'] * 1e3:.2f},"
+            f"{d.get('memory_raw_s', 0) * 1e3:.2f},"
+            f"{d['collective_s'] * 1e3:.2f},{d['mfu']:.4f},"
+            f"{d['useful_flop_ratio']:.3f},ok"
+        )
+    return rows

@@ -1,0 +1,33 @@
+"""Benchmark entry point: one function per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [table1|table2|table6|roofline]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import roofline_report, table1_dse, table2_scaling, table6_baseline
+
+    tables = {
+        "table1": table1_dse.run,
+        "table2": table2_scaling.run,
+        "table6": table6_baseline.run,
+        "roofline": roofline_report.run,
+    }
+    want = sys.argv[1:] or list(tables)
+    for name in want:
+        t0 = time.perf_counter()
+        rows = tables[name]()
+        dt = time.perf_counter() - t0
+        print(f"# === {name} ({dt:.1f}s) ===")
+        for r in rows:
+            print(r)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Design-space exploration walkthrough -- the paper's Table I methodology
+applied to the TPU target.
+
+    PYTHONPATH=src python examples/dse_sweep.py --m 8192 --n 8192 --k 8192
+
+Prints the candidate (bm, bn, bk) grid with the VMEM 'fitter' verdict and
+roofline terms, then the balance-equation-derived plan (eq. 14/18 on TPU)
+and the mesh-level (level-3) check for a TP-sharded version.
+"""
+
+import argparse
+
+from repro.core import dse
+from repro.core.blocking import derive_block_plan, tensor_parallel_balance
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=8192)
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--k", type=int, default=8192)
+    ap.add_argument("--tp", type=int, default=16)
+    args = ap.parse_args()
+
+    recs = dse.explore(
+        args.m, args.n, args.k,
+        bms=(128, 256, 512, 1024, 2048),
+        bns=(128, 256, 512, 1024, 2048),
+        bks=(256, 512, 1024, 2048, 4096),
+    )
+    print(f"{'block':>16} {'vmem KiB':>9} {'fit':>4} {'AI':>7} {'bound':>8}")
+    for r in sorted(recs, key=lambda r: (not r.fits, -r.arithmetic_intensity))[:20]:
+        print(f"{r.ident:>16} {r.vmem_kib:9.0f} {'ok' if r.fits else 'FAIL':>4} "
+              f"{r.arithmetic_intensity:7.1f} {r.bound_by:>8}")
+    n_fail = sum(not r.fits for r in recs)
+    print(f"... {len(recs)} candidates, {n_fail} 'fitter failures' (VMEM)")
+
+    best = dse.best(recs)
+    plan = derive_block_plan(args.m, args.n, args.k)
+    print(f"\nDSE best: {best.ident}   balance-equation plan: "
+          f"{plan.bm}x{plan.bn}x{plan.bk} (AI {plan.arithmetic_intensity():.0f})")
+
+    bal = tensor_parallel_balance(args.m, args.n, args.k, args.tp, links=4)
+    print(f"level-3 (mesh) balance at TP={args.tp}: "
+          f"compute {bal['t_compute'] * 1e3:.2f} ms vs collective "
+          f"{bal['t_collective'] * 1e3:.2f} ms -> "
+          f"{'hidden' if bal['balanced'] else 'COLLECTIVE-BOUND'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Batched serving example: prefill a batch of prompts, decode with greedy
+or temperature sampling, rotate finished slots (continuous batching).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch glm4-9b --batch 4
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.synthetic import make_batch
+from repro.models.registry import get_model
+from repro.serving.engine import ServeConfig, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b", choices=configs.ALL_ARCHS)
+    ap.add_argument("--full", action="store_true", help="full config (needs RAM)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch) if args.full else dataclasses.replace(
+        configs.get_smoke(args.arch), dtype="float32"
+    )
+    model = get_model(cfg)
+    engine = ServeEngine(
+        model,
+        model.init(jax.random.PRNGKey(0)),
+        ServeConfig(
+            max_len=args.prompt_len + args.gen + cfg.n_patches * (cfg.frontend == "vit"),
+            batch=args.batch,
+            temperature=args.temperature,
+        ),
+    )
+
+    prompts = make_batch(cfg, batch=args.batch, seq=args.prompt_len, kind="prefill")
+    t0 = time.perf_counter()
+    first = engine.prefill(prompts)
+    jax.block_until_ready(first)
+    print(f"prefill: {args.batch} x {args.prompt_len} tokens "
+          f"in {(time.perf_counter() - t0) * 1e3:.0f} ms (incl. compile)")
+
+    t0 = time.perf_counter()
+    out = engine.decode(first, args.gen - 1)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    n = args.batch * (args.gen - 1)
+    print(f"decode: {n} tokens in {dt * 1e3:.0f} ms = {n / dt:.1f} tok/s")
+    print("slot 0:", out[0, :12].tolist())
+
+    # continuous batching: retire slot 0, its cache is cleared for a new prompt
+    engine.reset_slots(jnp.asarray([1] + [0] * (args.batch - 1)))
+    print("slot 0 rotated out (continuous batching hook)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Fault tolerance: sharded checkpoint save/restore with elastic re-shard."""
+
+from repro.checkpoint.ckpt import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,173 @@
+"""Sharded checkpointing: npz-per-host shards, async writer, elastic restore.
+
+Contract (DESIGN.md §4):
+  * save is ATOMIC: a checkpoint directory is complete iff its DONE marker
+    exists; the trainer only resumes from complete checkpoints, so a crash
+    mid-write can never corrupt a resume point.
+  * save is ASYNC: arrays are fetched to host then written on a worker
+    thread, off the training critical path (``AsyncCheckpointer``).
+  * restore is ELASTIC: arrays are saved *unsharded per leaf* (per-host
+    shard files hold that host's addressable slice; on single-host they
+    hold the full leaf) and restored with ``jax.device_put`` against the
+    CURRENT mesh's shardings, so a job restarted on a different device
+    count re-shards transparently (e.g. a dropped pod: (2,16,16)->(16,16)).
+  * step resume: the step number is part of the checkpoint; the data
+    pipeline is stateless (``batch_at(step)``) so no iterator state needs
+    saving.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _key_str(entry) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_key_str(p) for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def _unflatten_into(tree: Any, blobs: dict[str, np.ndarray]) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(_key_str(p) for p in path)
+        if key not in blobs:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = blobs[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != expected {leaf.shape}"
+            )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _ckpt_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def save_checkpoint(root: str, step: int, tree: Any, *, host: int = 0) -> str:
+    """Blocking save.  Returns the checkpoint directory."""
+    d = _ckpt_dir(root, step)
+    tmp = d + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    blobs = _flatten(tree)
+    np.savez(os.path.join(tmp, f"host_{host:05d}.npz"), **blobs)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(blobs)}, f)
+    if os.path.exists(d):  # idempotent: step already saved
+        shutil.rmtree(tmp)
+    else:
+        os.replace(tmp, d)
+    with open(os.path.join(d, "DONE"), "w") as f:
+        f.write("ok")
+    return d
+
+
+def latest_step(root: str) -> int | None:
+    """Newest COMPLETE checkpoint step, or None."""
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(root, name, "DONE")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    root: str, template: Any, *, step: int | None = None, shardings: Any = None
+) -> tuple[Any, int]:
+    """Restore into the structure of ``template``; re-shard to ``shardings``
+    (a same-structure tree of NamedSharding) if given -- the elastic path."""
+    step = latest_step(root) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no complete checkpoint under {root}")
+    d = _ckpt_dir(root, step)
+    blobs: dict[str, np.ndarray] = {}
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".npz"):
+            with np.load(os.path.join(d, name)) as z:
+                blobs.update({k: z[k] for k in z.files})
+    tree = _unflatten_into(template, blobs)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda arr, s: jax.device_put(arr, s), tree, shardings
+        )
+    else:
+        tree = jax.tree.map(
+            lambda arr, t: jax.numpy.asarray(arr, dtype=t.dtype), tree, template
+        )
+    return tree, step
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget background saver (one in flight at a time)."""
+
+    def __init__(self, root: str, *, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()  # one outstanding write; fetch happens on caller thread
+        blobs = _flatten(tree)  # device->host copy on the critical path only
+
+        def _write():
+            try:
+                d = _ckpt_dir(self.root, step)
+                tmp = d + ".tmp"
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, "host_00000.npz"), **blobs)
+                with open(os.path.join(tmp, "meta.json"), "w") as f:
+                    json.dump({"step": step, "n_leaves": len(blobs)}, f)
+                if os.path.exists(d):  # idempotent re-save of a step
+                    shutil.rmtree(tmp)
+                else:
+                    os.replace(tmp, d)
+                with open(os.path.join(d, "DONE"), "w") as f:
+                    f.write("ok")
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.root)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.root, n, "DONE"))
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(_ckpt_dir(self.root, s), ignore_errors=True)

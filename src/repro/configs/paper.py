@@ -1,0 +1,39 @@
+"""The paper's own design points (Table I) as framework configs.
+
+These are GEMM design-space points, not LM architectures; the benchmark
+``benchmarks/table1_dse.py`` and the analytical regression tests consume
+them.  The TPU translation of each design is the block plan whose VMEM
+working set plays the role of the design's DSP/M20K claim.
+"""
+
+from __future__ import annotations
+
+from repro.core.analytical import PaperDesign, paper_designs
+from repro.core.blocking import BlockPlan
+
+# Matrix sizes the paper measures (Tables II-V): multiples of d1.
+PAPER_MATRIX_SIZES = {
+    "C": [672, 1344, 2688, 5376, 10752, 21504],
+    "E": [576, 1152, 2304, 4608, 9216, 18432],
+    "F": [560, 1120, 2240, 4480, 8960, 17920],
+    "G": [512, 1024, 2048, 4096, 8192, 16384],
+    "H": [512, 1024, 2048, 4096, 8192, 16384],
+    "I": [512, 1024, 2048, 4096, 8192, 16384],
+    "L": [512, 1024, 2048, 4096, 8192, 16384],
+    "M": [512, 1024, 2048, 4096, 8192, 16384],
+    "N": [512, 1024, 2048, 4096, 8192, 16384],
+}
+
+
+def designs() -> dict[str, PaperDesign]:
+    return paper_designs()
+
+
+def tpu_block_plan_for(design: PaperDesign, d2: int) -> BlockPlan:
+    """The TPU analogue of one paper design at problem size d2^3:
+    (d_i0, d_j0) -> (bm, bn) scaled to MXU quanta, d_k0 -> bk."""
+    arr = design.array
+    bm = max(8, arr.d_i0 // 8 * 8)
+    bn = max(128, arr.d_j0 // 128 * 128) if arr.d_j0 >= 128 else 128
+    bk = max(128, arr.d_k0 * 64)  # d_k0 in {2..8} -> bk in {128..512}
+    return BlockPlan(d2, d2, d2, bm, bn, bk)

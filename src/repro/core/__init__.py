@@ -1,0 +1,12 @@
+"""Core: the paper's contribution (3D-systolic blocked GEMM methodology).
+
+  analytical  -- eqs. (1)-(19) of the paper, verbatim
+  blocking    -- balance-equation block derivation (Def. 4 on TPU)
+  systolic    -- pure-JAX dataflow reference of Definitions 1/2/4
+  dse         -- Table-I-style design-space exploration
+  ops         -- backend-switchable matmul used by every model projection
+"""
+
+from repro.core import analytical, blocking, dse, hw, ops, systolic  # noqa: F401
+from repro.core.blocking import BlockPlan, derive_block_plan  # noqa: F401
+from repro.core.ops import einsum, matmul, set_backend, use_backend  # noqa: F401

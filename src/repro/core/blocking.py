@@ -1,0 +1,210 @@
+"""TPU-side generalisation of the paper's reuse-ratio blocking (Def. 4).
+
+The paper derives its level-1 block sizes d_i1/d_j1 from *balance equations*:
+the on-chip cache must re-serve each element r = B_array / B_global times so
+the slower memory level never stalls the MACs (eqs. 14, 18).  On TPU the same
+argument applies three times:
+
+  level 0  MXU tile        (128 x 128, fixed by hardware -- the paper's d_p)
+  level 1  VMEM block      (bm, bn, bk)    <- this module derives these
+  level 2  per-chip shard  (HBM resident)
+  level 3  mesh shard      (ICI collectives -- see distributed/sharding.py)
+
+At each level the condition is identical in shape to eq. (14):
+
+  arithmetic_intensity(block) >= machine_balance(level)
+
+and the paper's "fitter failure" rows of Table I become an *analytical* VMEM
+capacity check here (we reject infeasible shapes before lowering instead of
+after hours of place-and-route).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import hw
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """A concrete (bm, bn, bk) tiling of an (M, N, K) matmul."""
+
+    m: int
+    n: int
+    k: int
+    bm: int
+    bn: int
+    bk: int
+    in_dtype_bytes: int = 2  # bf16 streams
+    acc_dtype_bytes: int = 4  # fp32 accumulator, always
+    double_buffer: bool = True
+
+    # -- level-1 (VMEM) occupancy: the "fitter" check -----------------------
+
+    def vmem_bytes(self) -> int:
+        """Working set of one grid step: A block + B block + accumulator.
+
+        Pallas double-buffers the input streams (the paper's overlapped
+        Read/Compute, Section V); the fp32 accumulator is single-buffered
+        scratch (C-stationary).
+        """
+        mult = 2 if self.double_buffer else 1
+        a_block = self.bm * self.bk * self.in_dtype_bytes * mult
+        b_block = self.bk * self.bn * self.in_dtype_bytes * mult
+        acc = self.bm * self.bn * self.acc_dtype_bytes
+        out = self.bm * self.bn * self.in_dtype_bytes * mult
+        return a_block + b_block + acc + out
+
+    def fits_vmem(self, chip: hw.TPUv5e = hw.TPU_V5E) -> bool:
+        return self.vmem_bytes() <= chip.vmem_budget_bytes
+
+    def mxu_aligned(self, chip: hw.TPUv5e = hw.TPU_V5E) -> bool:
+        """All three dims hardware aligned (lane=128; sublane handled by
+        Mosaic for the minor-most dim)."""
+        return (
+            self.bm % chip.sublane_dim == 0
+            and self.bn % chip.lane_dim == 0
+            and self.bk % chip.lane_dim == 0
+        )
+
+    # -- reuse ratios (paper eq. 14 reinterpreted) ---------------------------
+
+    def reuse_ratios(self) -> tuple[float, float]:
+        """(r_A, r_B): how many times each loaded element is used.
+
+        With C-stationary k-innermost ordering, an A element loaded into
+        VMEM is used bn times (once per output column in the block) and a
+        B element bm times.  These play exactly the role of eq. (14).
+        """
+        return float(self.bn), float(self.bm)
+
+    def hbm_traffic_bytes(self) -> int:
+        """Total HBM bytes moved by the whole (M,N,K) matmul under this plan.
+
+        A is re-read once per column-block (N/bn times), B once per
+        row-block (M/bm times); C is written once (k-innermost keeps
+        partials in VMEM; this is the adaptation of Section V where the
+        FPGA instead re-streams partial sums through the k 'layers').
+        """
+        n_col_blocks = math.ceil(self.n / self.bn)
+        n_row_blocks = math.ceil(self.m / self.bm)
+        a_bytes = self.m * self.k * self.in_dtype_bytes * n_col_blocks
+        b_bytes = self.k * self.n * self.in_dtype_bytes * n_row_blocks
+        c_bytes = self.m * self.n * self.in_dtype_bytes
+        return a_bytes + b_bytes + c_bytes
+
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k
+
+    def arithmetic_intensity(self) -> float:
+        """FLOP per HBM byte under this plan (to compare with ~240)."""
+        return self.flops() / self.hbm_traffic_bytes()
+
+    def compute_bound(self, chip: hw.TPUv5e = hw.TPU_V5E) -> bool:
+        return self.arithmetic_intensity() >= chip.machine_balance_hbm
+
+    # -- roofline terms (seconds on one chip) --------------------------------
+
+    def compute_seconds(self, chip: hw.TPUv5e = hw.TPU_V5E) -> float:
+        return self.flops() / chip.peak_flops_bf16
+
+    def memory_seconds(self, chip: hw.TPUv5e = hw.TPU_V5E) -> float:
+        return self.hbm_traffic_bytes() / chip.hbm_bw
+
+    def bound_by(self, chip: hw.TPUv5e = hw.TPU_V5E) -> str:
+        return (
+            "compute"
+            if self.compute_seconds(chip) >= self.memory_seconds(chip)
+            else "memory"
+        )
+
+
+def _round_to(x: int, quantum: int) -> int:
+    return max(quantum, (x // quantum) * quantum)
+
+
+def derive_block_plan(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    in_dtype_bytes: int = 2,
+    chip: hw.TPUv5e = hw.TPU_V5E,
+    max_bm: int = 1024,
+    max_bn: int = 1024,
+    max_bk: int = 2048,
+) -> BlockPlan:
+    """Derive a balanced (bm, bn, bk) from the level-1 balance equation.
+
+    This is the paper's eq. (18) for TPU: grow the block until the reuse
+    ratios satisfy the machine balance, subject to the VMEM 'fitter' check.
+    Preference order mirrors the paper's observation that the contraction
+    dim (their d_k0, our bk) is the cheap axis to grow -- it adds reuse for
+    *neither* operand but amortises accumulator traffic and lengthens the
+    pipeline (their register chains, our MXU pipeline occupancy).
+    """
+    quantum = chip.lane_dim
+
+    # Start square and balanced: need harmonic-mean(bm,bn)/2 * 2/bytes >= CB
+    #   AI(large K) ~= 2*bm*bn / ((bm+bn)*bytes)  =>  bm=bn=512 gives 256 @bf16.
+    target = chip.machine_balance_hbm * in_dtype_bytes  # bm==bn target value
+    side = _round_to(int(2 ** math.ceil(math.log2(max(quantum, target)))), quantum)
+
+    bm = min(side, _round_to(m, chip.sublane_dim) if m < side else side, max_bm)
+    bn = min(side, _round_to(n, quantum) if n < quantum else side, max_bn)
+    bm = max(bm, chip.sublane_dim)
+    bn = max(bn, quantum)
+
+    # bk: as large as VMEM allows (paper: d_k0 'controls the data throughput
+    # between processing elements'); bounded by K itself.
+    bk = min(max_bk, _round_to(k, quantum) if k >= quantum else quantum)
+    plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+    while not plan.fits_vmem(chip) and bk > quantum:
+        bk //= 2
+        plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+    while not plan.fits_vmem(chip) and (bm > chip.sublane_dim or bn > quantum):
+        if bm >= bn and bm > chip.sublane_dim:
+            bm //= 2
+        else:
+            bn //= 2
+        plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+    if not plan.fits_vmem(chip):
+        raise ValueError(f"no feasible block plan for ({m},{n},{k})")
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Level-3: the same balance equation at the mesh/ICI level (beyond paper).
+# ---------------------------------------------------------------------------
+
+
+def tensor_parallel_balance(
+    m: int,
+    n: int,
+    k: int,
+    tp: int,
+    *,
+    in_dtype_bytes: int = 2,
+    links: int = 1,
+    chip: hw.TPUv5e = hw.TPU_V5E,
+) -> dict[str, float]:
+    """Check eq.-(14)-style balance for a TP-sharded matmul.
+
+    Shard N over `tp` chips; each step all-gathers the (m,k) activations
+    (ring: (tp-1)/tp of the tensor crosses each link) and computes
+    2*m*(n/tp)*k FLOPs.  Returns the two times and the ratio; ratio <= 1
+    means the collective hides under compute (balanced), the mesh-level
+    analogue of 'no stalls'.
+    """
+    per_chip_flops = 2 * m * n * k / tp
+    ag_bytes = m * k * in_dtype_bytes * (tp - 1) / tp
+    t_compute = per_chip_flops / chip.peak_flops_bf16
+    t_coll = ag_bytes / (chip.ici_bw_per_link * links)
+    return {
+        "t_compute": t_compute,
+        "t_collective": t_coll,
+        "ratio": t_coll / t_compute if t_compute else float("inf"),
+        "balanced": t_coll <= t_compute,
+    }

@@ -1,0 +1,82 @@
+"""Design-space exploration over block shapes -- the Table I analogue.
+
+The paper explores (d_i0, d_j0, d_k0, d_p) by synthesising each candidate and
+reading f_max from the fitter; rows A/B/D *fail* the fitter.  On TPU the
+clock is fixed and 'fitting' is analytical, so the DSE becomes: enumerate
+(bm, bn, bk), reject shapes that exceed VMEM (the fitter analogue), and rank
+the survivors by their roofline terms.  ``benchmarks/table1_dse.py`` renders
+this as the Table I counterpart and optionally validates candidates
+numerically through the Pallas kernel in interpret mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core import hw
+from repro.core.blocking import BlockPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class DSERecord:
+    bm: int
+    bn: int
+    bk: int
+    vmem_kib: float
+    fits: bool  # the "fitter" column of Table I
+    arithmetic_intensity: float
+    compute_bound: bool
+    compute_us: float
+    memory_us: float
+    bound_by: str
+
+    @property
+    def ident(self) -> str:
+        return f"{self.bm}x{self.bn}x{self.bk}"
+
+
+def explore(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    bms=(128, 256, 512, 1024),
+    bns=(128, 256, 512, 1024),
+    bks=(128, 256, 512, 1024, 2048),
+    in_dtype_bytes: int = 2,
+    chip: hw.TPUv5e = hw.TPU_V5E,
+) -> list[DSERecord]:
+    """Enumerate candidate block shapes for an (M, N, K) matmul."""
+    records = []
+    for bm, bn, bk in itertools.product(bms, bns, bks):
+        if m % bm or n % bn or k % bk:
+            continue
+        plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+        fits = plan.fits_vmem(chip) and plan.mxu_aligned(chip)
+        records.append(
+            DSERecord(
+                bm=bm,
+                bn=bn,
+                bk=bk,
+                vmem_kib=plan.vmem_bytes() / 1024,
+                fits=fits,
+                arithmetic_intensity=plan.arithmetic_intensity(),
+                compute_bound=plan.compute_bound(chip),
+                compute_us=plan.compute_seconds(chip) * 1e6,
+                memory_us=plan.memory_seconds(chip) * 1e6,
+                bound_by=plan.bound_by(chip),
+            )
+        )
+    return records
+
+
+def best(records: list[DSERecord]) -> DSERecord:
+    """Rank feasible shapes: lowest max(compute, memory) time, then AI."""
+    feasible = [r for r in records if r.fits]
+    if not feasible:
+        raise ValueError("no feasible block shape (all 'fitter failed')")
+    return min(
+        feasible,
+        key=lambda r: (max(r.compute_us, r.memory_us), -r.arithmetic_intensity),
+    )

@@ -1,0 +1,90 @@
+"""Hardware constants for both the paper's target (Stratix 10 / Bittware 520N)
+and our target (TPU v5e), used by the analytical models and the roofline pass.
+
+The Stratix-10 numbers come straight from the paper (Sections II, VI); the TPU
+numbers are the grading constants given for this reproduction:
+197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s per ICI link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# ---------------------------------------------------------------------------
+# Paper hardware: Intel Stratix 10 GX2800 on a Bittware 520N.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stratix10:
+    """Constants from the paper (Sections II-A/II-B/VI)."""
+
+    # Four DDR4@2400MT/s modules, 19200 MB/s each (Section II-A).
+    ddr_modules: int = 4
+    ddr_bw_per_module: float = 19200e6  # bytes/s
+    # 5760 DSPs on chip; 4713 available to kernel logic after the BSP
+    # (Section VI); the paper's designs use at most 4704.
+    dsp_total: int = 5760
+    dsp_available: int = 4713
+    dsp_used_max: int = 4704
+    # A DSP in fused multiply-add configuration does 2 FLOP/cycle (eq. 5).
+    flop_per_dsp_cycle: int = 2
+    sp_float_bytes: int = 4
+
+    def b_ddr_floats_per_cycle(self, f_max_hz: float) -> int:
+        """Eq. (4): max sp-floats/cycle one LSU can request without stalls.
+
+        LSUs are power-of-two sized; the byte budget per cycle that one
+        memory controller can sustain halves when f_max crosses 300 MHz.
+        """
+        if f_max_hz <= 150e6:
+            raise ValueError("paper model only covers 150 MHz < f_max <= 600 MHz")
+        if f_max_hz <= 300e6:
+            return 16  # 64 B/cycle
+        if f_max_hz <= 600e6:
+            return 8  # 32 B/cycle
+        raise ValueError("f_max above 600 MHz is outside the paper's model")
+
+
+STRATIX10 = Stratix10()
+
+
+# ---------------------------------------------------------------------------
+# Our hardware: TPU v5e (per-chip), the reproduction target.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUv5e:
+    peak_flops_bf16: float = 197e12  # FLOP/s per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    ici_bw_per_link: float = 50e9  # bytes/s per link (grading constant)
+    # VMEM budget we allow a single kernel instance to claim.  v5e has
+    # ~128 MiB VMEM per core; we leave headroom for Mosaic's own buffers
+    # and for double-buffered pipelining (which doubles input block space).
+    vmem_budget_bytes: int = 64 * 1024 * 1024
+    # MXU native tile: 128x128 systolic array, 8-deep sublane packing for
+    # bf16.  All matmul block dims should be multiples of these.
+    mxu_dim: int = 128
+    lane_dim: int = 128
+    sublane_dim: int = 8
+
+    @property
+    def machine_balance_hbm(self) -> float:
+        """FLOP per HBM byte needed to be compute-bound (~240 for v5e)."""
+        return self.peak_flops_bf16 / self.hbm_bw
+
+    def machine_balance_ici(self, links: int = 1) -> float:
+        """FLOP per collective byte needed for collectives to hide."""
+        return self.peak_flops_bf16 / (self.ici_bw_per_link * links)
+
+
+TPU_V5E = TPUv5e()
+
+DTYPE_BYTES = {
+    "float32": 4,
+    "bfloat16": 2,
+    "float16": 2,
+    "int8": 1,
+    "fp8": 1,
+}

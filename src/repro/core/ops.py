@@ -1,0 +1,156 @@
+"""Backend-switchable matmul: the single entry point all models project through.
+
+The paper's contribution is a GEMM substrate; making every dense projection in
+the framework route through ``repro.core.ops.matmul`` is what makes it a
+first-class feature rather than a demo.  Backends:
+
+  "xla"              jax.lax.dot_general (used for dry-run/roofline, where
+                     XLA's FLOP accounting and GSPMD sharding do the work)
+  "pallas-systolic"  the 3D-blocked Pallas kernel (TPU target; interpret=True
+                     on CPU), block shapes from ``core.blocking``
+  "reference"        the structured Definition-4 reference (tests/pedagogy)
+
+Backend selection is a contextvar so tests and benchmarks can flip it locally
+without threading arguments through every model.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_BACKEND = contextvars.ContextVar("repro_matmul_backend", default="xla")
+
+VALID_BACKENDS = ("xla", "pallas-systolic", "reference")
+
+
+def get_backend() -> str:
+    return _BACKEND.get()
+
+
+def set_backend(name: str) -> None:
+    if name not in VALID_BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; valid: {VALID_BACKENDS}")
+    _BACKEND.set(name)
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    if name not in VALID_BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; valid: {VALID_BACKENDS}")
+    token = _BACKEND.set(name)
+    try:
+        yield
+    finally:
+        _BACKEND.reset(token)
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    out_dtype=None,
+    precision=None,
+) -> jax.Array:
+    """``x @ w`` with x of shape (..., K) and w of shape (K, N).
+
+    Contraction always accumulates in fp32 (preferred_element_type), the
+    TPU-native analogue of the paper's DSP fused multiply-add chains.
+    """
+    backend = _BACKEND.get()
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    if w.shape[0] != k:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {w.shape}")
+
+    if backend == "xla":
+        # `bf16-reduce` (§Perf): emit the dot output in bf16 so GSPMD's
+        # row-parallel partial-sum all-reduces move half the bytes.  The
+        # MXU accumulates fp32 internally either way; only the cross-shard
+        # reduction narrows.
+        from repro.models.modelflags import opt as _opt
+
+        pref = (
+            jnp.dtype(out_dtype)
+            if _opt("bf16-reduce") and jnp.dtype(out_dtype) == jnp.bfloat16
+            else jnp.float32
+        )
+        y = jax.lax.dot_general(
+            x,
+            w,
+            (((x.ndim - 1,), (0,)), ((), ())),
+            precision=precision,
+            preferred_element_type=pref,
+        )
+        return y.astype(out_dtype)
+
+    x2 = x.reshape(-1, k)
+    if backend == "pallas-systolic":
+        from repro.kernels.systolic import ops as systolic_ops
+
+        y2 = systolic_ops.matmul(x2, w, out_dtype=out_dtype)
+    elif backend == "reference":
+        from repro.core.blocking import derive_block_plan
+        from repro.core.systolic import blocked_matmul
+
+        m, n = x2.shape[0], w.shape[1]
+        # The reference requires divisible shapes; fall back to a single
+        # block when the problem is smaller than a quantum.
+        bm = _largest_divisor_block(m, 512)
+        bn = _largest_divisor_block(n, 512)
+        bk = _largest_divisor_block(k, 512)
+        from repro.core.blocking import BlockPlan
+
+        plan = BlockPlan(m, n, k, bm, bn, bk)
+        y2 = blocked_matmul(x2, w, plan).astype(out_dtype)
+    else:  # pragma: no cover
+        raise AssertionError(backend)
+    return y2.reshape(*lead, w.shape[1])
+
+
+def _largest_divisor_block(dim: int, cap: int) -> int:
+    """Largest power-of-two-ish block <= cap that divides dim."""
+    for cand in (1024, 512, 256, 128, 64, 32, 16, 8, 4, 2):
+        if cand <= cap and dim % cand == 0:
+            return cand
+    return dim
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
+    """Per-expert batched matmul (E, C, K) @ (E, K, N), backend-switchable.
+
+    Also accepts dispatch-grouped input (G, E, C, K) (vmapped over G; see
+    models/moe.py).  The MoE expert GEMM: the "pallas-systolic" backend
+    routes to the grouped systolic kernel (DESIGN.md §3); "xla"/"reference"
+    use einsum, which is what the dry-run lowers so GSPMD owns the EP
+    sharding.
+    """
+    out_dtype = out_dtype or x.dtype
+    if _BACKEND.get() == "pallas-systolic":
+        from repro.kernels.grouped import ops as grouped_ops
+
+        if x.ndim == 4:
+            return jax.vmap(
+                lambda xx: grouped_ops.grouped_matmul(xx, w, out_dtype=out_dtype)
+            )(x)
+        return grouped_ops.grouped_matmul(x, w, out_dtype=out_dtype)
+    spec = "geck,ekn->gecn" if x.ndim == 4 else "eck,ekn->ecn"
+    if jax.default_backend() == "cpu" and x.dtype == jnp.bfloat16:
+        # XLA:CPU's DotThunk lacks BF16xBF16=F32 for multi-batch-dim dots;
+        # widen on CPU only (tests/smoke) -- TPU takes the bf16 path.
+        x, w = x.astype(jnp.float32), w.astype(jnp.float32)
+    y = jnp.einsum(spec, x, w, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)
+
+
+def einsum(spec: str, *args, out_dtype=None, **kw):
+    """fp32-accumulating einsum (attention et al. go through here so the
+    accumulation-precision policy is uniform framework-wide)."""
+    out_dtype = out_dtype or args[0].dtype
+    y = jnp.einsum(spec, *args, preferred_element_type=jnp.float32, **kw)
+    return y.astype(out_dtype)

@@ -1,0 +1,4 @@
+"""Data pipeline: synthetic generators + mmap token shards."""
+
+from repro.data.synthetic import make_batch, input_specs  # noqa: F401
+from repro.data.sharded import TokenShardDataset  # noqa: F401

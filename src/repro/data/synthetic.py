@@ -1,0 +1,74 @@
+"""Synthetic batches + ShapeDtypeStruct input specs for every (arch, shape).
+
+``input_specs`` is the dry-run contract (deliverable e): weak-type-correct,
+shardable stand-ins for every model input, no device allocation.
+``make_batch`` materializes the same structure with deterministic PRNG data
+for smoke tests, examples, and benchmarks.
+
+Layout per shape kind:
+  train    {"tokens", "labels"[, "loss_mask"][, "patch_embeds"]}
+  prefill  {"tokens"[, "patch_embeds"]}
+  decode   {"tokens" (B, 1[, ncb])} + the (B, seq_len) cache built separately
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig, ShapeConfig
+
+
+def _token_shape(cfg: ArchConfig, batch: int, seq: int) -> tuple[int, ...]:
+    if cfg.frontend == "audio_codec":
+        return (batch, seq, cfg.n_codebooks)
+    return (batch, seq)
+
+
+def _text_len(cfg: ArchConfig, seq: int) -> int:
+    """vlm: n_patches image positions + text fill the assigned seq_len."""
+    if cfg.frontend == "vit":
+        return seq - cfg.n_patches
+    return seq
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's batch argument."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, 1), i32)}
+    st = _text_len(cfg, s)
+    batch: dict = {
+        "tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, st), i32)
+    }
+    if cfg.frontend == "vit":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.vit_dim), jnp.dtype(cfg.dtype)
+        )
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct(_token_shape(cfg, b, st), i32)
+    return batch
+
+
+def make_batch(
+    cfg: ArchConfig, *, batch: int, seq: int, kind: str = "train", seed: int = 0
+) -> dict:
+    """Concrete random batch with the ``input_specs`` structure."""
+    rng = np.random.default_rng(seed)
+    st = _text_len(cfg, seq) if kind != "decode" else 1
+    b = batch
+    toks = rng.integers(0, cfg.vocab_size, _token_shape(cfg, b, st), dtype=np.int32)
+    out: dict = {"tokens": jnp.asarray(toks)}
+    if cfg.frontend == "vit" and kind != "decode":
+        out["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_patches, cfg.vit_dim)),
+            dtype=jnp.dtype(cfg.dtype),
+        )
+    if kind == "train":
+        labels = rng.integers(
+            0, cfg.vocab_size, _token_shape(cfg, b, st), dtype=np.int32
+        )
+        out["labels"] = jnp.asarray(labels)
+    return out

@@ -1,0 +1,10 @@
+"""Distribution: sharding rules, fault tolerance."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    batch_shardings,
+    batch_specs,
+    cache_shardings,
+    cache_specs,
+    param_shardings,
+    param_specs,
+)

@@ -1,0 +1,81 @@
+"""Opt-in activation sharding annotations.
+
+``constrain(x, *axes)`` is a no-op unless annotations are enabled (the
+launchers enable them inside a mesh context); model code can therefore
+annotate EP/SP-critical intermediates without breaking single-device tests.
+Axis names not present in the active mesh are dropped per-dim; dims that
+don't divide their axis are left unsharded.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_MESH = contextvars.ContextVar("repro_annotation_mesh", default=None)
+
+
+@contextlib.contextmanager
+def annotations(mesh: Mesh):
+    token = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(token)
+
+
+def _resolve(ax, mesh: Mesh):
+    if ax is None:
+        return None, 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None, 1
+    size = math.prod(mesh.shape[a] for a in axes)
+    return (axes if len(axes) > 1 else axes[0]), size
+
+
+def constrain(x: jax.Array, *axes):
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    spec = []
+    for i, ax in enumerate(axes[: x.ndim]):
+        name, size = _resolve(ax, mesh)
+        spec.append(name if name is not None and x.shape[i] % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec))
+    )
+
+
+def constrain_pref(x: jax.Array, batch_dim: int | None, candidates: tuple[int, ...]):
+    """Shard ``batch_dim`` over ("pod","data") and place "model" on the FIRST
+    candidate dim whose size divides the TP degree.
+
+    This is the attention-internal rule: score/context tensors shard over
+    the query-head (or query-sequence) dim, whichever the arch's head count
+    allows -- the GQA-with-few-KV-heads (glm4 kv=2) and MoE (q_per_kv=8)
+    cases pick different dims, and pure-MHA archs fall through to the
+    sequence dim.
+    """
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    spec = [None] * x.ndim
+    if batch_dim is not None:
+        name, size = _resolve(("pod", "data"), mesh)
+        if name is not None and x.shape[batch_dim] % size == 0:
+            spec[batch_dim] = name
+    mname, msize = _resolve("model", mesh)
+    if mname is not None:
+        for c in candidates:
+            if c < x.ndim and x.shape[c] % msize == 0:
+                spec[c] = mname
+                break
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec))
+    )

@@ -1,0 +1,315 @@
+"""PartitionSpec rules: the paper's balance equations at the mesh level.
+
+DESIGN.md §2 (last row): the paper derives block sizes from reuse-ratio
+balance equations (eq. 14/18); sharding is the SAME equation one level up --
+collective bytes per chip must hide under compute, which fixes how each
+tensor family splits over the ("pod", "data", "model") axes:
+
+  batch / activations   ("pod", "data")   pure DP across pods (cheapest
+                                          inter-pod traffic: one gradient
+                                          all-reduce per step)
+  weights, column dim   "model"           TP: up-projections column-sharded,
+                        (+FSDP "data")    down/out-projections row-sharded;
+                                          FSDP (ZeRO-3) shards the other dim
+                                          over "data" so params+optimizer
+                                          never replicate
+  MoE experts, E dim    "model"           EP: 128 experts / 16 = 8 per shard
+  KV caches             heads -> "model"  or sequence -> "model" when the
+                                          arch has fewer KV heads than TP
+                                          (glm4 kv=2): SP-decode / split-K
+
+Rules are *name-based* with shape-divisibility fallbacks: a dim that does
+not divide its mesh axis is left unsharded (GSPMD would pad; we prefer the
+predictable layout).  Stacked scan parameters (leading n_layers dim) get a
+leading None automatically.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Parameter leaves stacked with a leading layer dim live under these keys.
+_STACKED_PARAM_ROOTS = {"layers", "mlstm", "slstm", "mamba"}
+
+# Column-parallel (output dim -> "model", input dim -> FSDP "data").
+_COL = {
+    "wq", "w_gate", "w_up", "wq_a", "wq_b", "wkv_a", "wkv_b",
+    "w1", "in_proj", "w_x", "w_if",
+}
+# Row-parallel (input dim -> "model", output dim -> FSDP "data").
+_ROW = {"wo", "w_down", "w2", "out_proj"}
+# KV projections: REPLICATED.  GQA head counts rarely divide TP, so their
+# activation (grad)s are model-replicated; FSDP-sharding these weights then
+# makes GSPMD all-gather the (B, S, kv_dim) grads over the batch axis to
+# form the data-sharded wgrad (measured: 4x 1 GiB gathers per glm4 layer
+# pair).  The weights are a few MB -- replication is the balance-equation
+# answer (wgrad becomes a local dot + small all-reduce).
+_REPL = {"wk", "wv"}
+
+
+def _expert_spec() -> tuple:
+    """MoE expert stacks (E, D, F)/(E, F, D): EP over "model" always; the
+    FSDP "data" dim is dropped under the `moe-tp-expert` perf option (§Perf:
+    the expert wgrad batch-gathers measured on the EP+FSDP baseline)."""
+    from repro.models.modelflags import opt
+
+    if opt("moe-tp-expert"):
+        return ("model", None, None)
+    return ("model", "data", None)
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return math.prod(mesh.shape[a] for a in ax)
+    return mesh.shape[ax]
+
+
+def _drop_indivisible(spec: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Leave a dim unsharded when it does not divide its axis product."""
+    out = []
+    for i, dim in enumerate(shape):
+        ax = spec[i] if i < len(spec) else None
+        out.append(ax if ax is not None and dim % _axis_size(mesh, ax) == 0 else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _param_rule(path: str, shape: tuple[int, ...]) -> tuple:
+    """Base spec for the *unstacked* parameter shape.
+
+    Weights are TP-sharded over "model" only; the "data" axis holds
+    optimizer state (ZeRO-1, see ``zero1_shardings``), NOT weights.
+    Measured rationale: data-sharded weight dims whose activation grads are
+    not correspondingly sharded make GSPMD all-gather the (B, S, ...)
+    activations over the batch axis to form wgrads (4x 1-37 GiB gathers
+    per glm4 layer pair).  Dense archs here fit TP-only weights; the one
+    family that cannot -- MoE expert stacks at 235B -- keeps an FSDP "data"
+    dim and its wgrad collectives are a tracked §Perf item.
+    """
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    if name == "table":  # embedding (V, D): vocab-parallel
+        return ("model", None)
+    if name == "tables":  # audio (ncb, V, D)
+        return (None, "model", None)
+    if name == "router":  # (D, E): small, feeds a top-k -> replicate
+        return (None, None)
+    if name == "conv_w":  # (K, C): channel-shard
+        return (None, "model")
+    if name == "r_h":  # sLSTM recurrent (nh, hd, 4hd)
+        return ("model", None, None)
+    if name in _REPL:
+        return (None,) * nd
+    if name in _COL:
+        if nd == 3:  # MoE expert stack (E, D, F): EP + FSDP (235B must)
+            return _expert_spec()
+        return (None, "model")
+    if name in _ROW:
+        if nd == 3:  # (E, F, D)
+            return _expert_spec()
+        return ("model", None)
+    if name == "w":  # generic dense: lm_head (D, V) / audio heads (ncb, D, V)
+        # vocab-parallel ONLY: the CE backward's d(logits) is batch+vocab
+        # sharded; a data-sharded d_in would make GSPMD all-gather the
+        # 40 GB d(logits) over batch to form the wgrad.
+        if nd == 3:
+            return (None, None, "model")
+        return (None, "model")
+    # 1D (norm scales, biases, gates) and anything unknown: replicate.
+    return (None,) * nd
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """Same-structure pytree of PartitionSpec for a params pytree."""
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.split("/")[0] in _STACKED_PARAM_ROOTS
+        shape = tuple(leaf.shape)
+        base_shape = shape[1:] if stacked else shape
+        base = _param_rule(ps, base_shape)
+        if stacked:
+            base = (None, *base)
+        return _drop_indivisible(base, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh)
+    )
+
+
+def zero1_specs(params: Any, mesh: Mesh) -> Any:
+    """ZeRO-1 optimizer-state specs: the param spec PLUS a "data" shard on
+    the first free divisible dim.  Moments are elementwise state -- GSPMD
+    reshards the update (reduce-scatter grads in, all-gather params out),
+    which is exactly the ZeRO-1 exchange -- and fp32 m/v (8 bytes/param,
+    the bulk of training memory) never replicate across the data axis."""
+    dsize = math.prod(mesh.shape[a] for a in _batch_axes(mesh)) or 1
+
+    baxes = _batch_axes(mesh)
+
+    def add_data(spec: P, leaf) -> P:
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        used = set()
+        for ax in dims:
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                used.add(a)
+        if used & set(baxes):  # already data-sharded (MoE experts)
+            return P(*dims)
+        for i, ax in enumerate(dims):
+            if ax is None and leaf.shape[i] % dsize == 0 and dsize > 1:
+                dims[i] = baxes if len(baxes) > 1 else baxes[0]
+                break
+        return P(*dims)
+
+    return jax.tree.map(add_data, param_specs(params, mesh), params)
+
+
+def zero1_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), zero1_specs(params, mesh)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batches (tokens / labels / patch embeddings)
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Shard the leading (global batch) dim over ("pod","data")."""
+    baxes = _batch_axes(mesh)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        spec = (baxes, *([None] * (len(shape) - 1)))
+        return _drop_indivisible(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def batch_shardings(batch: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs(batch, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Decode caches / recurrent states (stacked leading layer dim)
+# ---------------------------------------------------------------------------
+
+
+def _cache_rule(name: str, shape: tuple[int, ...], mesh: Mesh, baxes) -> tuple:
+    """Base spec for the unstacked cache leaf (first dim is batch B except
+    ``pos``).  Preference order for the KV sequence/head dims: shard heads
+    over "model" when they divide; otherwise shard the *sequence* dim over
+    "model" (SP-decode / flash-decoding split-K -- the glm4 kv=2 and the
+    B=1 long_500k cases)."""
+    nd = len(shape)
+    tp = mesh.shape.get("model", 1)
+    if name == "pos":  # (T,) absolute positions: replicated
+        return (None,) * nd
+    b = shape[0]
+    b_ok = b % _axis_size(mesh, baxes) == 0 if baxes else False
+    bspec = baxes if b_ok else None
+
+    if name in ("k", "v") and nd == 4:  # (B, T, H, hd)
+        t, h = shape[1], shape[2]
+        if h % tp == 0:
+            return (bspec, None, "model", None)
+        if t % tp == 0:
+            return (bspec, "model", None, None)
+        return (bspec, None, None, None)
+    if name in ("c_kv", "k_rope") and nd == 3:  # MLA latents (B, T, r)
+        t = shape[1]
+        return (bspec, "model" if t % tp == 0 else None, None)
+    if name == "ssm" and nd == 4:  # mamba2 (B, nh, P, N)
+        return (bspec, "model", None, None)
+    if name == "C" and nd == 4:  # mLSTM matrix memory (B, nh, hd, hd)
+        return (bspec, "model", None, None)
+    if name == "conv" and nd == 3:  # (B, K-1, C)
+        return (bspec, None, "model")
+    if name in ("c", "n", "m", "h"):
+        if nd == 2:  # sLSTM scalars (B, d)
+            return (bspec, "model")
+        if nd == 3:  # mLSTM n (B, nh, hd)
+            return (bspec, "model", None)
+        return (bspec,) + (None,) * (nd - 1)
+    return (bspec,) + (None,) * (nd - 1)
+
+
+def cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """Cache pytrees from ``transformer.init_cache`` (leading layer dim)."""
+    baxes = _batch_axes(mesh)
+
+    def rule(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        shape = tuple(leaf.shape)
+        base = _cache_rule(name, shape[1:], mesh, baxes)
+        return _drop_indivisible((None, *base), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def cache_shardings(cache: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), cache_specs(cache, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Mesh-level balance report (the eq.-14 argument at the ICI level)
+# ---------------------------------------------------------------------------
+
+
+def mesh_balance_report(n_params: int, global_batch: int, seq: int, mesh: Mesh):
+    """Per-step collective bytes vs compute under the default layout.
+
+    Returns the level-3 'reuse ratio' check: gradient all-reduce bytes per
+    chip vs the 6ND compute per chip -- the analogue of the paper's
+    stall-free condition for the data-parallel axis.
+    """
+    from repro.core import hw
+
+    chip = hw.TPU_V5E
+    dp = math.prod(mesh.shape[a] for a in _batch_axes(mesh)) or 1
+    tp = mesh.shape.get("model", 1)
+    tokens = global_batch * seq
+    flops_per_chip = 6 * n_params * tokens / (dp * tp)
+    # ring all-reduce over dp: 2*(dp-1)/dp of the (sharded) gradient bytes
+    grad_bytes = 2 * n_params / tp  # bf16 grads, TP-sharded
+    ar_bytes = 2 * grad_bytes * (dp - 1) / dp
+    t_compute = flops_per_chip / chip.peak_flops_bf16
+    t_coll = ar_bytes / chip.ici_bw_per_link
+    return {
+        "t_compute_s": t_compute,
+        "t_allreduce_s": t_coll,
+        "ratio": t_coll / t_compute if t_compute else float("inf"),
+        "balanced": t_coll <= t_compute,
+    }

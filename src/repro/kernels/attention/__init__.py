@@ -1,0 +1,2 @@
+from repro.kernels.attention import ops, ref  # noqa: F401
+from repro.kernels.attention.ops import flash_attention  # noqa: F401

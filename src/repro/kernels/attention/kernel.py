@@ -1,0 +1,166 @@
+"""Block-streamed (flash) attention under the paper's blocking discipline.
+
+The paper's three-level blocking (Def. 4) applied to attention: Q blocks are
+C-stationary residents (the fp32 accumulator plus online-softmax statistics
+live in VMEM scratch), K/V blocks stream through the innermost 'arbitrary'
+grid dimension exactly like the contraction blocks of the systolic matmul.
+The reuse-ratio argument (eq. 14) is what makes bq/bkv > 128 mandatory:
+each streamed K/V element must be reused across the whole resident Q block
+for the HBM stream to keep the MXU fed.
+
+Supports causal masking and sliding windows (SWA, for h2o-danube3) plus a
+kv-length mask so padded streams stay exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+_STAT_LANES = 128  # online-softmax stats replicated across one lane tile
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    n_kv: int,
+    bq: int,
+    bkv: int,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    kv_valid: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Block-level skip: the analogue of the paper's activation-time diagonal
+    # (Fig. 1) -- PEs outside the wavefront do no work.
+    q_lo = iq * bq
+    k_lo = ik * bkv
+    needed = k_lo < kv_valid
+    if causal:
+        needed = jnp.logical_and(needed, k_lo <= q_lo + bq - 1)
+    if window is not None:
+        needed = jnp.logical_and(needed, k_lo + bkv - 1 >= q_lo - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bkv, d)
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (bq, bkv)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = kpos < kv_valid
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype),
+            v_ref[0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == n_kv - 1)
+    def _epilogue():
+        l = l_ref[:, :1]
+        out = jnp.where(l > 0, acc_ref[...] / jnp.where(l > 0, l, 1.0), 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_call(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    bq: int,
+    bkv: int,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    kv_valid: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (BH, Sq, D), k/v: (BH, Skv, D); Sq % bq == 0, Skv % bkv == 0."""
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    assert sq % bq == 0 and skv % bkv == 0, ((sq, skv), (bq, bkv))
+    grid = (bh, sq // bq, skv // bkv)
+
+    q_spec = pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0))
+    kv_spec = pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0))
+    o_spec = pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0))
+
+    params = pltpu.CompilerParams(
+        dimension_semantics=(
+            pltpu.GridDimensionSemantics.PARALLEL,
+            pltpu.GridDimensionSemantics.PARALLEL,
+            pltpu.GridDimensionSemantics.ARBITRARY,
+        ),
+    )
+    cost = pl.CostEstimate(
+        flops=4 * bh * sq * skv * d,
+        bytes_accessed=(q.size + k.size + v.size + q.size) * q.dtype.itemsize,
+        transcendentals=bh * sq * skv,
+    )
+    kern = functools.partial(
+        _flash_kernel,
+        n_kv=grid[2],
+        bq=bq,
+        bkv=bkv,
+        scale=scale,
+        causal=causal,
+        window=window,
+        kv_valid=kv_valid,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((bq, _STAT_LANES), jnp.float32),
+        ],
+        compiler_params=params,
+        cost_estimate=cost,
+        interpret=interpret,
+        name=f"flash_attn_bq{bq}_bkv{bkv}{'_causal' if causal else ''}",
+    )(q, k, v)

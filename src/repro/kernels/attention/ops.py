@@ -1,0 +1,88 @@
+"""jit'd public wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import kernel as _kernel
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, q: int) -> int:
+    return (x + q - 1) // q * q
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bkv", "interpret"),
+)
+def _flash_jit(q, k, v, *, causal, window, scale, bq, bkv, interpret):
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    sqp, skvp = _round_up(sq, bq), _round_up(skv, bkv)
+    if sqp != sq:
+        q = jnp.pad(q, ((0, 0), (0, sqp - sq), (0, 0)))
+    if skvp != skv:
+        k = jnp.pad(k, ((0, 0), (0, skvp - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skvp - skv), (0, 0)))
+    o = _kernel.flash_attention_call(
+        q,
+        k,
+        v,
+        bq=bq,
+        bkv=bkv,
+        scale=scale,
+        causal=causal,
+        window=window,
+        kv_valid=skv,
+        interpret=interpret,
+    )
+    return o[:, :sq]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int | None = None,
+    bkv: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash attention over (B, H, S, D) tensors (KV heads == Q heads).
+
+    GQA callers broadcast KV to Q heads first (the model layer does this);
+    a head-aware kernel is a recorded future optimisation.
+    """
+    if q.ndim != 4:
+        raise ValueError(f"expected (B, H, S, D), got {q.shape}")
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    scale = scale if scale is not None else d**-0.5
+    bq = bq or min(512, _round_up(sq, 128))
+    bkv = bkv or min(512, _round_up(skv, 128))
+    interpret = _auto_interpret() if interpret is None else interpret
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, skv, d)
+    vf = v.reshape(b * h, skv, d)
+    o = _flash_jit(
+        qf,
+        kf,
+        vf,
+        causal=causal,
+        window=window,
+        scale=scale,
+        bq=bq,
+        bkv=bkv,
+        interpret=interpret,
+    )
+    return o.reshape(b, h, sq, d)

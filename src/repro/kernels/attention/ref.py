@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (BH, Sq, D), k/v: (BH, Skv, D).  Standard softmax attention."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d**-0.5
+    s = jnp.einsum("bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    sq, skv = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.grouped import ops, ref  # noqa: F401
+from repro.kernels.grouped.ops import grouped_matmul  # noqa: F401

@@ -1,0 +1,69 @@
+"""jit'd public wrapper for the grouped (per-expert) matmul kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hw
+from repro.kernels.grouped import kernel as _kernel
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, q: int) -> int:
+    return (x + q - 1) // q * q
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_dtype", "bc", "bn", "bk", "interpret")
+)
+def _grouped_jit(x, w, *, out_dtype, bc, bn, bk, interpret):
+    e, c, k = x.shape
+    n = w.shape[2]
+    cp, np_, kp = _round_up(c, bc), _round_up(n, bn), _round_up(k, bk)
+    if (cp, kp) != (c, k):
+        x = jnp.pad(x, ((0, 0), (0, cp - c), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, 0), (0, kp - k), (0, np_ - n)))
+    y = _kernel.grouped_matmul_call(
+        x, w, bc=bc, bn=bn, bk=bk, out_dtype=out_dtype, interpret=interpret
+    )
+    return y[:, :c, :n]
+
+
+def grouped_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    out_dtype=None,
+    bc: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """y[e] = x[e] @ w[e] for all experts e.
+
+    x: (E, C, K) capacity-dispatched tokens; w: (E, K, N) expert weights.
+    Block defaults follow the balance-equation plan but cap at the
+    (padded) per-expert problem size.
+    """
+    if x.ndim != 3 or w.ndim != 3 or x.shape[0] != w.shape[0]:
+        raise ValueError(f"bad grouped shapes {x.shape} @ {w.shape}")
+    if x.shape[2] != w.shape[1]:
+        raise ValueError(f"contraction mismatch {x.shape} @ {w.shape}")
+    chip = hw.TPU_V5E
+    e, c, k = x.shape
+    n = w.shape[2]
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    bc = bc or min(512, _round_up(c, chip.sublane_dim))
+    bn = bn or min(512, _round_up(n, chip.lane_dim))
+    bk = bk or min(1024, _round_up(k, chip.lane_dim))
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _grouped_jit(
+        x, w, out_dtype=str(out_dtype), bc=bc, bn=bn, bk=bk, interpret=interpret
+    )

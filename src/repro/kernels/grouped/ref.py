@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the grouped matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
+    """(E, C, K) @ (E, K, N) -> (E, C, N) with fp32 accumulation."""
+    out_dtype = out_dtype or x.dtype
+    y = jnp.einsum("eck,ekn->ecn", x, w, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)

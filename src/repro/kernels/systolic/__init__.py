@@ -1,0 +1,2 @@
+from repro.kernels.systolic import ops, ref  # noqa: F401
+from repro.kernels.systolic.ops import matmul  # noqa: F401

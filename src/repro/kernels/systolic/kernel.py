@@ -1,0 +1,148 @@
+"""Pallas TPU kernel for the 3D-blocked systolic matmul (paper Def. 2/4).
+
+Mapping (see DESIGN.md §2): the paper's PE grid (d_i0, d_j0, d_k0) becomes the
+VMEM block triple (bm, bn, bk); its dot-product-unit width d_p is the MXU's
+native 128; its two-level blocking becomes the Pallas grid
+(M/bm, N/bn, K/bk).  Where the FPGA was forced to run k *slowest* (no II=1
+accumulation across iterations), the MXU accumulates freely, so we run k
+*innermost* with a C-stationary fp32 accumulator in VMEM scratch -- the
+adaptation documented in DESIGN.md §9.2.
+
+The optional fused epilogue (bias + activation) is a beyond-paper extension:
+it removes one full write+read of the (M, N) output against HBM for every
+FFN projection, directly attacking the roofline memory term.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+def _mmm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, activation: str):
+    """One (bm, bn) grid step at contraction block k = program_id(2).
+
+    The paper's Listing 2 inner body: multiply-accumulate one (bm, bk) x
+    (bk, bn) tile pair.  ``acc_ref`` is the C-stationary fp32 accumulator
+    (the FPGA version streams these partials through its k 'layers'
+    instead -- see DESIGN.md).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = ACTIVATIONS[activation](acc_ref[...]).astype(o_ref.dtype)
+
+
+def _mmm_bias_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, n_k, activation):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        y = acc_ref[...] + bias_ref[...].astype(jnp.float32)
+        o_ref[...] = ACTIVATIONS[activation](y).astype(o_ref.dtype)
+
+
+def systolic_matmul_call(
+    a: jax.Array,
+    b: jax.Array,
+    bias: jax.Array | None,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype,
+    activation: str = "none",
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call wrapper; shapes must already divide the blocks.
+
+    a: (M, K), b: (K, N), bias: (N,) or None -> (M, N).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        (m, n, k),
+        (bm, bn, bk),
+    )
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    grid = (m // bm, n // bn, k // bk)
+
+    # Index maps: A blocks walk (i, k), B blocks walk (k, j), C blocks (i, j).
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+
+    cost = pl.CostEstimate(
+        flops=2 * m * n * k,
+        bytes_accessed=(
+            a.size * a.dtype.itemsize * grid[1]
+            + b.size * b.dtype.itemsize * grid[0]
+            + m * n * jnp.dtype(out_dtype).itemsize
+        ),
+        transcendentals=0,
+    )
+    params = pltpu.CompilerParams(
+        dimension_semantics=(
+            pltpu.GridDimensionSemantics.PARALLEL,
+            pltpu.GridDimensionSemantics.PARALLEL,
+            pltpu.GridDimensionSemantics.ARBITRARY,
+        ),
+    )
+
+    if bias is None:
+        kernel = functools.partial(_mmm_kernel, n_k=grid[2], activation=activation)
+        in_specs = [a_spec, b_spec]
+        operands = (a, b)
+    else:
+        assert bias.shape == (n,), bias.shape
+        kernel = functools.partial(
+            _mmm_bias_kernel, n_k=grid[2], activation=activation
+        )
+        bias_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+        in_specs = [a_spec, b_spec, bias_spec]
+        operands = (a, b, bias.reshape(1, n))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=params,
+        cost_estimate=cost,
+        interpret=interpret,
+        name=f"systolic_mmm_{bm}x{bn}x{bk}_{activation}",
+    )(*operands)

@@ -1,0 +1,97 @@
+"""jit'd public wrapper for the systolic matmul kernel.
+
+Handles block-plan derivation (balance equations from ``core.blocking``),
+padding of non-divisible shapes, dtype policy, and interpret-mode fallback on
+CPU.  This is the function ``repro.core.ops.matmul`` dispatches to when the
+"pallas-systolic" backend is selected.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hw
+from repro.core.blocking import BlockPlan, derive_block_plan
+from repro.kernels.systolic import kernel as _kernel
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, q: int) -> int:
+    return (x + q - 1) // q * q
+
+
+def _clamp_plan(m: int, n: int, k: int, plan: BlockPlan | None) -> tuple[int, int, int]:
+    """Choose (bm, bn, bk), shrinking to the (padded) problem if small."""
+    chip = hw.TPU_V5E
+    if plan is None:
+        plan = derive_block_plan(max(m, 8), max(n, 128), max(k, 128))
+    bm = min(plan.bm, _round_up(m, chip.sublane_dim))
+    bn = min(plan.bn, _round_up(n, chip.lane_dim))
+    bk = min(plan.bk, _round_up(k, chip.lane_dim))
+    return bm, bn, bk
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("out_dtype", "activation", "bm", "bn", "bk", "interpret"),
+)
+def _matmul_jit(a, b, bias, *, out_dtype, activation, bm, bn, bk, interpret):
+    m, k = a.shape
+    n = b.shape[1]
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp != m or kp != k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
+    bias_p = None
+    if bias is not None:
+        bias_p = jnp.pad(bias, (0, np_ - n)) if np_ != n else bias
+    y = _kernel.systolic_matmul_call(
+        a_p,
+        b_p,
+        bias_p,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        out_dtype=out_dtype,
+        activation=activation,
+        interpret=interpret,
+    )
+    return y[:m, :n]
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    out_dtype=None,
+    activation: str = "none",
+    plan: BlockPlan | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(M, K) @ (K, N) [+bias] [activation] via the 3D-blocked Pallas kernel."""
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"expected 2D operands, got {a.shape} @ {b.shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
+    interpret = _auto_interpret() if interpret is None else interpret
+    m, k = a.shape
+    n = b.shape[1]
+    bm, bn, bk = _clamp_plan(m, n, k, plan)
+    return _matmul_jit(
+        a,
+        b,
+        bias,
+        out_dtype=str(out_dtype),
+        activation=activation,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        interpret=interpret,
+    )

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the systolic matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.systolic.kernel import ACTIVATIONS
+
+
+def matmul_ref(
+    a: jax.Array,
+    b: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    activation: str = "none",
+    out_dtype=None,
+) -> jax.Array:
+    """(M, K) @ (K, N) [+ bias] [act] with fp32 accumulation."""
+    out_dtype = out_dtype or a.dtype
+    y = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return ACTIVATIONS[activation](y).astype(out_dtype)

@@ -1,0 +1,353 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract the roofline terms (deliverables e + g).
+
+MUST be invoked as a fresh process (the XLA_FLAGS line above runs before
+any other import so jax sees 512 host devices):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+
+Per cell, two kinds of compile:
+
+  GATE   the full-L model, layer stacks as lax.scan (layer-count-independent
+         HLO): proves the sharding config lowers + compiles on the
+         production mesh, and yields memory_analysis (per-device bytes).
+
+  PROBES (single-pod roofline only) two reduced-layer UNROLLED lowers
+         (1 and 2 layer-units).  XLA's HloCostAnalysis counts a while-loop
+         body ONCE, so scanned models under-report FLOPs by ~L x; the
+         probes make every layer explicit and the cell's costs are the
+         exact linear extrapolation fixed + slope * units(L).  Probes use
+         einsum attention so QK^T/PV FLOPs are first-class HLO dots.
+
+Step functions per shape kind:
+  train_4k      train_step (loss+grads+AdamW, remat, donated state)
+  prefill_32k   serve prefill: attention families prime KV caches from the
+                parallel forward (chunked attention in the gate so no
+                (S,S) score tensor is materialized); recurrent families
+                lower the parallel forward (state priming is sequential in
+                the serving engine)
+  decode_*      serve_step (1 new token against a seq_len-deep cache)
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.synthetic import input_specs
+from repro.distributed import annotate, sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import attention as attn_mod
+from repro.models import transformer
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig, active_params
+from repro.models.registry import get_model
+from repro.optim.adamw import adamw_init
+from repro.roofline.analyze import (
+    RooflineTerms,
+    analyze_compiled,
+    collective_bytes,
+    fused_bytes,
+    model_flops_for,
+)
+from repro.train.loop import TrainConfig, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Config preparation
+# ---------------------------------------------------------------------------
+
+
+def _prep_cfg(cfg: ArchConfig, shape: ShapeConfig) -> ArchConfig:
+    """Launcher-side config tweaks for the big meshes: EP dispatch groups
+    one-per-batch-row so the MoE sort stays batch-shard-local."""
+    if cfg.moe is not None:
+        g = shape.global_batch
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=g)
+        )
+    return cfg
+
+
+def _layer_unit(cfg: ArchConfig) -> int:
+    """Layers per repeating unit (what the probes scale by)."""
+    if cfg.family == "ssm":
+        return cfg.ssm.slstm_every
+    if cfg.family == "hybrid":
+        return cfg.attn_every + 1
+    return 1
+
+
+def _probe_cfg(cfg: ArchConfig, units: int) -> ArchConfig:
+    return dataclasses.replace(cfg, n_layers=units * _layer_unit(cfg))
+
+
+def _full_units(cfg: ArchConfig) -> float:
+    return cfg.n_layers / _layer_unit(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _opt_shardings(opt_s, params_s, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    z_shard = sharding.zero1_shardings(params_s, mesh)  # ZeRO-1 m/v
+    return type(opt_s)(
+        step=NamedSharding(mesh, P()), mu=z_shard, nu=z_shard
+    )
+
+
+def _build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """-> (step_fn, arg_shapes, in_shardings, donate) ready to lower."""
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params_s = _abstract(model.init, key)
+    p_shard = sharding.param_shardings(params_s, mesh)
+    batch_s = input_specs(cfg, shape)
+    b_shard = sharding.batch_shardings(batch_s, mesh)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(remat=True, microbatches=1)
+        step = make_train_step(model, tcfg)
+        opt_s = _abstract(adamw_init, params_s)
+        o_shard = _opt_shardings(opt_s, params_s, mesh)
+        args = (params_s, opt_s, batch_s, jax.ShapeDtypeStruct((), jnp.int32))
+        return step, args, (p_shard, o_shard, b_shard, None), (0, 1)
+
+    if shape.kind == "prefill":
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+
+            def step(params, batch):
+                return model.prefill(params, batch, max_len=shape.seq_len)
+
+        else:  # recurrent families: parallel forward, last-token head
+
+            def step(params, batch):
+                return model.forward(params, batch, head_mode="last")
+
+        return step, (params_s, batch_s), (p_shard, b_shard), ()
+
+    # decode: 1 new token against a seq_len cache
+    cache_s = _abstract(
+        lambda: model.init_cache(
+            shape.global_batch, shape.seq_len, jnp.dtype(cfg.dtype)
+        )
+    )
+    c_shard = sharding.cache_shardings(cache_s, mesh)
+
+    def step(params, cache, tokens, pos):
+        return model.decode_step(params, tokens, cache=cache, pos=pos)
+
+    args = (
+        params_s,
+        cache_s,
+        batch_s["tokens"],
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return step, args, (p_shard, c_shard, b_shard["tokens"], None), (1,)
+
+
+def _lower_compile(cfg, shape, mesh, *, attn_impl: str, unroll: bool):
+    import contextlib
+
+    ctx = transformer.unroll_layers() if unroll else contextlib.nullcontext()
+    with mesh, attn_mod.use_attn_impl(attn_impl), annotate.annotations(mesh), ctx:
+        step, args, in_sh, donate = _build_cell(cfg, shape, mesh)
+        jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _probe_costs(compiled) -> dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(fused_bytes(text)),  # post-fusion HBM model
+        "bytes_raw": float(ca.get("bytes accessed", 0.0)),
+        "coll": float(sum(coll.values())),
+        "coll_breakdown": coll,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Per-cell driver
+# ---------------------------------------------------------------------------
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    attn_impl: str | None = None,
+    probes: bool = True,
+) -> dict:
+    cfg0 = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg0.subquadratic:
+        return {
+            "arch": arch, "shape": shape_name, "status": "skipped",
+            "reason": "pure full-attention arch cannot hold a 512k dense KV "
+                      "cache (documented skip, DESIGN.md §5)",
+        }
+    cfg = _prep_cfg(cfg0, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    n_dev = mesh.devices.size
+
+    gate_impl = attn_impl or ("chunked" if shape.kind == "prefill" else "einsum")
+
+    # --- GATE: full-L scan compile -------------------------------------------
+    t0 = time.perf_counter()
+    compiled = _lower_compile(cfg, shape, mesh, attn_impl=gate_impl, unroll=False)
+    t_gate = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    mem_rec = {
+        k: int(getattr(mem, k))
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+        if hasattr(mem, k)
+    }
+
+    rec = {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "multi_pod": multi_pod,
+        "n_devices": n_dev,
+        "gate_attn_impl": gate_impl,
+        "gate_compile_s": round(t_gate, 2),
+        "memory_analysis": mem_rec,
+    }
+    if multi_pod or not probes:
+        return rec
+
+    # --- PROBES: unrolled 1- and 2-unit lowers for exact cost slopes ---------
+    # Train/decode probes default to einsum (QK^T/PV as first-class dots);
+    # prefill probes default to chunked -- its static path unrolls the block
+    # loops into first-class dots too, carries the block-level sharding
+    # constraints of the production path, and skips causally-dead blocks.
+    # An explicit --attn-impl (perf iterations) overrides both.
+    probe_impl = attn_impl or ("chunked" if shape.kind == "prefill" else "einsum")
+    pa = _probe_costs(
+        _lower_compile(_probe_cfg(cfg, 1), shape, mesh, attn_impl=probe_impl, unroll=True)
+    )
+    pb = _probe_costs(
+        _lower_compile(_probe_cfg(cfg, 2), shape, mesh, attn_impl=probe_impl, unroll=True)
+    )
+    units = _full_units(cfg)
+
+    def extrap(key):
+        slope = pb[key] - pa[key]
+        return max(0.0, pa[key] + slope * (units - 1.0))
+
+    coll_bd = {
+        k: max(0.0, pa["coll_breakdown"][k]
+               + (pb["coll_breakdown"][k] - pa["coll_breakdown"][k]) * (units - 1.0))
+        for k in pa["coll_breakdown"]
+    }
+    terms = RooflineTerms(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        n_devices=n_dev,
+        flops_per_device=extrap("flops"),
+        bytes_per_device=extrap("bytes"),
+        raw_bytes_per_device=extrap("bytes_raw"),
+        coll_bytes_per_device=extrap("coll"),
+        coll_breakdown=coll_bd,
+        model_flops=model_flops_for(cfg, shape, active_params(cfg)),
+    )
+    rec.update(terms.to_dict())
+    rec["probe_1unit"] = {k: v for k, v in pa.items() if k != "coll_breakdown"}
+    rec["probe_2unit"] = {k: v for k, v in pb.items() if k != "coll_breakdown"}
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=configs.ALL_ARCHS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true", help="every (arch x shape)")
+    ap.add_argument("--multi-pod", action="store_true", help="(2,16,16) mesh")
+    ap.add_argument("--attn-impl", choices=attn_mod.ATTN_IMPLS, default=None)
+    ap.add_argument("--no-probes", action="store_true", help="gate compile only")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    cells = configs.all_cells() if args.all else [(args.arch, args.shape)]
+    if not args.all and (args.arch is None or args.shape is None):
+        ap.error("--arch and --shape required unless --all")
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape_name in cells:
+        tag = f"{arch}__{shape_name}__{'2x16x16' if args.multi_pod else '16x16'}"
+        try:
+            rec = run_cell(
+                arch, shape_name,
+                multi_pod=args.multi_pod, attn_impl=args.attn_impl,
+                probes=not args.no_probes,
+            )
+        except Exception as e:  # a failure here is a bug in the system
+            failures += 1
+            rec = {
+                "status": "error",
+                "arch": arch,
+                "shape": shape_name,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+        status = rec["status"]
+        if status == "ok" and "compute_s" in rec:
+            extra = (
+                f"compute {rec['compute_s']*1e3:9.2f} ms | "
+                f"memory {rec['memory_s']*1e3:9.2f} ms | "
+                f"coll {rec['collective_s']*1e3:8.2f} ms | "
+                f"dom {rec['dominant']:10s} | gate {rec['gate_compile_s']:6.1f}s"
+            )
+        elif status == "ok":
+            extra = f"gate-only, compile {rec['gate_compile_s']:6.1f}s"
+        elif status == "error":
+            extra = rec["error"][:140]
+        else:
+            extra = rec.get("reason", "")[:80]
+        print(f"[{status:7s}] {tag:58s} {extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Serving launcher: batched prefill + decode with the ServeEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro import configs
+from repro.data.synthetic import make_batch
+from repro.models.registry import get_model
+from repro.serving.engine import ServeConfig, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ALL_ARCHS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+
+    max_len = args.prompt_len + args.gen + (
+        cfg.n_patches if cfg.frontend == "vit" else 0
+    )
+    engine = ServeEngine(
+        model,
+        params,
+        ServeConfig(
+            max_len=max_len,
+            batch=args.batch,
+            temperature=args.temperature,
+            seed=args.seed,
+        ),
+    )
+    prompts = make_batch(
+        cfg, batch=args.batch, seq=args.prompt_len, kind="prefill", seed=args.seed
+    )
+
+    t0 = time.perf_counter()
+    first = engine.prefill(prompts)
+    jax.block_until_ready(first)
+    t_pf = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = engine.decode(first, args.gen - 1)
+    jax.block_until_ready(out)
+    t_dec = time.perf_counter() - t0
+
+    toks = args.batch * (args.gen - 1)
+    print(
+        f"prefill {args.batch}x{args.prompt_len} in {t_pf*1e3:.1f} ms | "
+        f"decode {toks} tokens in {t_dec*1e3:.1f} ms "
+        f"({toks/max(t_dec,1e-9):.1f} tok/s incl. compile)"
+    )
+    print("sample tokens:", out[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model substrate: configs, layers, attention, MoE, SSM, generic decoder."""
+
+from repro.models.config import SHAPES, ArchConfig, MLAConfig, MoEConfig, ShapeConfig, SSMConfig  # noqa: F401
+from repro.models.registry import Model, get_model  # noqa: F401

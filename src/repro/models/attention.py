@@ -1,0 +1,707 @@
+"""Attention variants: GQA (full / sliding-window) and MLA, train + decode.
+
+Caches are plain dict pytrees.  Every cache stores an absolute-position array
+``pos`` (S_cache,) so full caches and SWA ring buffers share one masking rule:
+
+    valid(k) = pos[k] >= 0  and  pos[k] <= q_pos  and  pos[k] > q_pos - window
+
+MLA decode uses the *absorbed* formulation (scores computed in the latent
+space, W_uk/W_uv folded into the query/output paths) -- the production decode
+path that keeps the cache at (kv_lora + rope) per token instead of 2*H*hd.
+
+The training path can run through the Pallas flash kernel (same blocking
+discipline as the systolic matmul) or through jnp einsum; the einsum path is
+what the dry-run lowers so XLA's FLOP accounting and GSPMD stay in charge.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops
+from repro.distributed.annotate import constrain_pref
+from repro.models import layers
+from repro.models.config import ArchConfig
+from repro.models.modelflags import LAYER_UNROLL
+
+_ATTN_IMPL = contextvars.ContextVar("repro_attn_impl", default="einsum")
+
+ATTN_IMPLS = ("einsum", "flash", "chunked", "flashvjp")
+
+
+def set_attn_impl(name: str) -> None:
+    assert name in ATTN_IMPLS
+    _ATTN_IMPL.set(name)
+
+
+def get_attn_impl() -> str:
+    return _ATTN_IMPL.get()
+
+
+@contextlib.contextmanager
+def use_attn_impl(name: str):
+    token = _ATTN_IMPL.set(name)
+    try:
+        yield
+    finally:
+        _ATTN_IMPL.reset(token)
+
+
+# ---------------------------------------------------------------------------
+# GQA / SWA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ArchConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": layers._dense_init(k1, d, cfg.n_heads * hd),
+        "wk": layers._dense_init(k2, d, cfg.n_kv_heads * hd),
+        "wv": layers._dense_init(k3, d, cfg.n_kv_heads * hd),
+        "wo": layers._dense_init(k4, cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(hd)
+        p["k_norm"] = layers.init_rmsnorm(hd)
+    return p
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, window: int | None) -> jax.Array:
+    """(S, T) causal (+ sliding-window) mask from absolute positions."""
+    m = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def _sdpa(q, k, v, mask, q_per_kv: int):
+    """q: (B,S,Hq,hd), k/v: (B,T,Hkv,hd), mask: (S,T) or (B,S,T) -> (B,S,Hq,hd).
+
+    TP pattern (Megatron-style): KV is broadcast to the Q heads and the
+    head dim is sharded over "model" end-to-end, so the (B, H, S, T) score
+    tensor and both attention einsums stay head-parallel in forward AND
+    backward (no resharding between fwd and transpose dots).  Archs whose
+    head count doesn't divide TP fall back to replicated heads (the
+    broadcast KV then costs nothing extra since GSPMD keeps one copy)."""
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    if q_per_kv > 1:
+        k = jnp.repeat(k, q_per_kv, axis=2)
+        v = jnp.repeat(v, q_per_kv, axis=2)
+    q = constrain_pref(q, 0, (2,))
+    k = constrain_pref(k, 0, (2,))
+    v = constrain_pref(v, 0, (2,))
+    scores = jnp.einsum(
+        "bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32
+    ) * (hd**-0.5)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v)
+    return constrain_pref(out, 0, (2,))
+
+
+def _blk_mask(q_lo, k_lo, bq, bkv, s, t, causal, window):
+    qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = (kpos < t) & (qpos < s)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _blk_needed(q_lo: int, k_lo: int, bq, bkv, causal, window) -> bool:
+    """Static causal/window block skip (the Fig.-1 activation wavefront)."""
+    if causal and k_lo > q_lo + bq - 1:
+        return False
+    if window is not None and k_lo + bkv - 1 < q_lo - window + 1:
+        return False
+    return True
+
+
+def _blk_fwd(qblk, kblk, vblk, q_lo, k_lo, m_p, l_p, acc, *, scale, causal,
+             window, s, t, bq, bkv):
+    """One online-softmax update.  qblk (B,bq,H,hd), k/v (B,bkv,H,*).
+    Stats (B,H,bq); acc (B,H,bq,hd_v)."""
+    sc = jnp.einsum(
+        "bqhd,bkhd->bhqk", qblk, kblk, preferred_element_type=jnp.float32
+    ) * scale
+    # TP placement per block: heads if they divide, else the within-block
+    # query rows (context parallelism for head-indivisible archs).
+    sc = constrain_pref(sc, 0, (1, 2))
+    mask = _blk_mask(q_lo, k_lo, bq, bkv, s, t, causal, window)
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    m_n = jnp.maximum(m_p, jnp.max(sc, axis=-1))
+    p = jnp.exp(sc - m_n[..., None])
+    alpha = jnp.exp(m_p - m_n)
+    l_n = alpha * l_p + jnp.sum(p, axis=-1)
+    pv = jnp.einsum(
+        "bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk,
+        preferred_element_type=jnp.float32,
+    )
+    return m_n, l_n, acc * alpha[..., None] + pv
+
+
+def chunked_mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int = 512,
+    bkv: int = 1024,
+    return_stats: bool = False,
+):
+    """Memory-efficient (online-softmax) attention in pure lax, O(bq*bkv) temps.
+
+    q: (B, S, H, hd), k/v: (B, T, H, hd) -> (B, S, H, hd).  Same math as the
+    flash Pallas kernel but expressed with ``lax.scan`` so it lowers on any
+    backend -- this is what the 32k-prefill dry-run cells lower instead of a
+    materialized (S, T) score tensor.  The blocking discipline is the paper's
+    Def. 4 once more: a resident Q block (C-stationary accumulator + softmax
+    stats) against streamed K/V blocks (the contraction stream).
+
+    Under ``modelflags.unroll_layers`` the block loops are PYTHON loops with
+    STATIC causal/window block skipping -- dry-run cost probes then count
+    exactly the blocks a TPU grid would execute (~half, for causal), and
+    nothing hides inside a while body.
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    hd_v = v.shape[-1]  # may differ from hd (MLA: v_head_dim < qk head dim)
+    scale = scale if scale is not None else hd**-0.5
+    bq = min(bq, s)
+    bkv = min(bkv, t)
+    sp = (s + bq - 1) // bq * bq
+    tp = (t + bkv - 1) // bkv * bkv
+    qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0))) if sp != s else q
+    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0))) if tp != t else k
+    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0))) if tp != t else v
+    # Pin K/V replicated across "model" for the block loops: consumers
+    # downstream (e.g. the primed KV cache) may be sequence-sharded, and
+    # without the pin GSPMD re-gathers every block's KV slice (measured:
+    # 2112 x 12 MiB gathers per musicgen-prefill layer pair).  One gather
+    # per layer instead; the ring-attention schedule is the further step.
+    from repro.distributed.annotate import constrain
+
+    kp = constrain(kp, ("pod", "data"), None, None, None)
+    vp = constrain(vp, ("pod", "data"), None, None, None)
+    nq, nkv = sp // bq, tp // bkv
+    blk = dict(scale=scale, causal=causal, window=window, s=s, t=t, bq=bq, bkv=bkv)
+
+    def finish(m_f, l_f, acc):
+        l_safe = jnp.where(l_f > 0, l_f, 1.0)
+        out = (acc / l_safe[..., None]).astype(q.dtype)  # (B,H,bq,hd_v)
+        lse = jnp.where(l_f > 0, m_f + jnp.log(l_safe), jnp.inf)
+        return out.transpose(0, 2, 1, 3), lse
+
+    if LAYER_UNROLL.get():  # static path: python loops + block skip
+        outs, lses = [], []
+        for qi in range(nq):
+            q_lo = qi * bq
+            qblk = jax.lax.dynamic_slice_in_dim(qp, q_lo, bq, axis=1)
+            m = jnp.full((b, h, bq), -1e30, jnp.float32)
+            l = jnp.zeros((b, h, bq), jnp.float32)
+            acc = jnp.zeros((b, h, bq, hd_v), jnp.float32)
+            for ki in range(nkv):
+                k_lo = ki * bkv
+                if not _blk_needed(q_lo, k_lo, bq, bkv, causal, window):
+                    continue
+                kblk = jax.lax.dynamic_slice_in_dim(kp, k_lo, bkv, axis=1)
+                vblk = jax.lax.dynamic_slice_in_dim(vp, k_lo, bkv, axis=1)
+                m, l, acc = _blk_fwd(qblk, kblk, vblk, q_lo, k_lo, m, l, acc, **blk)
+            o_blk, lse = finish(m, l, acc)
+            outs.append(o_blk)
+            lses.append(lse)
+        o = jnp.concatenate(outs, axis=1)[:, :s]
+        lse_all = jnp.concatenate(lses, axis=-1)[..., :s]
+        return (o, lse_all) if return_stats else o
+
+    # dynamic path: lax.scan over q blocks x kv blocks
+    qb = qp.reshape(b, nq, bq, h, hd).transpose(1, 0, 2, 3, 4)
+    kb = kp.reshape(b, nkv, bkv, h, hd).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(b, nkv, bkv, h, hd_v).transpose(1, 0, 2, 3, 4)
+
+    def q_block(carry, q_in):
+        qi, qblk = q_in  # (B, bq, H, hd)
+        q_lo = qi * bq
+
+        def kv_step(st, kv_in):
+            m_p, l_p, acc = st
+            ki, kblk, vblk = kv_in
+            m_n, l_n, a_n = _blk_fwd(
+                qblk, kblk, vblk, q_lo, ki * bkv, m_p, l_p, acc, **blk
+            )
+            return (m_n, l_n, a_n), None
+
+        m0 = jnp.full((b, h, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, bq), jnp.float32)
+        a0 = jnp.zeros((b, h, bq, hd_v), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nkv), kb, vb)
+        )
+        return carry, finish(m_f, l_f, acc)
+
+    _, (blocks, lses) = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    o = blocks.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, hd_v)[:, :s]
+    if return_stats:
+        lse = jnp.moveaxis(lses, 0, -2).reshape(b, h, sp)[..., :s]
+        return o, lse
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with custom VJP: block-recomputing backward, so training
+# never stores (or re-stores) an (S, T) softmax residual.  This is the
+# paper's Read/Compute-overlap + reuse discipline applied to the backward
+# pass -- the hillclimb that attacks the train-time memory roofline term.
+# ---------------------------------------------------------------------------
+
+
+def _blk_bwd(qblk, kblk, vblk, doblk, lseblk, dblk, q_lo, k_lo, *, scale,
+             causal, window, s, t, bq, bkv):
+    """Gradients of one block pair.  Returns (dq_blk, dk_blk, dv_blk).
+    lseblk/dblk: (B,H,bq) logsumexp rows and rowsum(do*o)."""
+    sc = jnp.einsum(
+        "bqhd,bkhd->bhqk", qblk, kblk, preferred_element_type=jnp.float32
+    ) * scale
+    sc = constrain_pref(sc, 0, (1, 2))
+    mask = _blk_mask(q_lo, k_lo, bq, bkv, s, t, causal, window)
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    p = jnp.exp(sc - lseblk[..., None])  # rows with lse=+inf -> 0
+    dp = jnp.einsum(
+        "bqhd,bkhd->bhqk", doblk.astype(jnp.float32), vblk.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    ds = p * (dp - dblk[..., None]) * scale
+    dq = jnp.einsum("bhqk,bkhd->bqhd", ds, kblk.astype(jnp.float32))
+    dk = jnp.einsum("bhqk,bqhd->bkhd", ds, qblk.astype(jnp.float32))
+    dv = jnp.einsum(
+        "bhqk,bqhd->bkhd", p, doblk.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_mha_fn(causal, window, scale, bq, bkv):
+    @jax.custom_vjp
+    def f(q, k, v):
+        return chunked_mha(
+            q, k, v, causal=causal, window=window, scale=scale, bq=bq, bkv=bkv
+        )
+
+    def fwd(q, k, v):
+        o, lse = chunked_mha(
+            q, k, v, causal=causal, window=window, scale=scale, bq=bq, bkv=bkv,
+            return_stats=True,
+        )
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        q, k, v, o, lse = res
+        b, s, h, hd = q.shape
+        t = k.shape[1]
+        sc = scale if scale is not None else hd**-0.5
+        bq_ = min(bq, s)
+        bkv_ = min(bkv, t)
+        sp = (s + bq_ - 1) // bq_ * bq_
+        tp = (t + bkv_ - 1) // bkv_ * bkv_
+
+        def padq(x):
+            return jnp.pad(x, ((0, 0), (0, sp - s), (0, 0), (0, 0))) if sp != s else x
+
+        def padk(x):
+            return jnp.pad(x, ((0, 0), (0, tp - t), (0, 0), (0, 0))) if tp != t else x
+
+        qp, op, dop = padq(q), padq(o), padq(do)
+        kp, vp = padk(k), padk(v)
+        dmat = jnp.sum(dop.astype(jnp.float32) * op.astype(jnp.float32), axis=-1)
+        dmat = dmat.transpose(0, 2, 1)  # (B,H,S)
+        lsep = (
+            jnp.pad(lse, ((0, 0), (0, 0), (0, sp - s)), constant_values=jnp.inf)
+            if sp != s else lse
+        )
+        dmatp = jnp.pad(dmat, ((0, 0), (0, 0), (0, sp - s))) if sp != s else dmat
+        nq, nkv = sp // bq_, tp // bkv_
+        blk = dict(scale=sc, causal=causal, window=window, s=s, t=t, bq=bq_, bkv=bkv_)
+
+        if LAYER_UNROLL.get():  # static path with block skip
+            dq = [jnp.zeros((b, bq_, h, hd), jnp.float32) for _ in range(nq)]
+            dks, dvs = [], []
+            for ki in range(nkv):
+                k_lo = ki * bkv_
+                kblk = jax.lax.dynamic_slice_in_dim(kp, k_lo, bkv_, axis=1)
+                vblk = jax.lax.dynamic_slice_in_dim(vp, k_lo, bkv_, axis=1)
+                dk_j = jnp.zeros((b, bkv_, h, hd), jnp.float32)
+                dv_j = jnp.zeros((b, bkv_, h, v.shape[-1]), jnp.float32)
+                for qi in range(nq):
+                    q_lo = qi * bq_
+                    if not _blk_needed(q_lo, k_lo, bq_, bkv_, causal, window):
+                        continue
+                    qblk = jax.lax.dynamic_slice_in_dim(qp, q_lo, bq_, axis=1)
+                    doblk = jax.lax.dynamic_slice_in_dim(dop, q_lo, bq_, axis=1)
+                    lseb = jax.lax.dynamic_slice_in_dim(lsep, q_lo, bq_, axis=2)
+                    db = jax.lax.dynamic_slice_in_dim(dmatp, q_lo, bq_, axis=2)
+                    dq_b, dk_b, dv_b = _blk_bwd(
+                        qblk, kblk, vblk, doblk, lseb, db, q_lo, k_lo, **blk
+                    )
+                    dq[qi] = dq[qi] + dq_b
+                    dk_j = dk_j + dk_b
+                    dv_j = dv_j + dv_b
+                dks.append(dk_j)
+                dvs.append(dv_j)
+            dq_full = jnp.concatenate(dq, axis=1)[:, :s]
+            dk_full = jnp.concatenate(dks, axis=1)[:, :t]
+            dv_full = jnp.concatenate(dvs, axis=1)[:, :t]
+            return (
+                dq_full.astype(q.dtype),
+                dk_full.astype(k.dtype),
+                dv_full.astype(v.dtype),
+            )
+
+        # dynamic path: scan kv-outer, q-inner; dq carried as a full buffer
+        def kv_block(dq_full, ki):
+            k_lo = ki * bkv_
+            kblk = jax.lax.dynamic_slice_in_dim(kp, k_lo, bkv_, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(vp, k_lo, bkv_, axis=1)
+
+            def q_step(carry, qi):
+                dqf, dk_j, dv_j = carry
+                q_lo = qi * bq_
+                qblk = jax.lax.dynamic_slice_in_dim(qp, q_lo, bq_, axis=1)
+                doblk = jax.lax.dynamic_slice_in_dim(dop, q_lo, bq_, axis=1)
+                lseb = jax.lax.dynamic_slice_in_dim(lsep, q_lo, bq_, axis=2)
+                db = jax.lax.dynamic_slice_in_dim(dmatp, q_lo, bq_, axis=2)
+                dq_b, dk_b, dv_b = _blk_bwd(
+                    qblk, kblk, vblk, doblk, lseb, db, q_lo, k_lo, **blk
+                )
+                old = jax.lax.dynamic_slice_in_dim(dqf, q_lo, bq_, axis=1)
+                dqf = jax.lax.dynamic_update_slice_in_dim(
+                    dqf, old + dq_b, q_lo, axis=1
+                )
+                return (dqf, dk_j + dk_b, dv_j + dv_b), None
+
+            dk0 = jnp.zeros((b, bkv_, h, hd), jnp.float32)
+            dv0 = jnp.zeros((b, bkv_, h, v.shape[-1]), jnp.float32)
+            (dq_full, dk_j, dv_j), _ = jax.lax.scan(
+                q_step, (dq_full, dk0, dv0), jnp.arange(nq)
+            )
+            return dq_full, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((b, sp, h, hd), jnp.float32)
+        dq_full, (dks, dvs) = jax.lax.scan(kv_block, dq0, jnp.arange(nkv))
+        dk_full = dks.transpose(1, 0, 2, 3, 4).reshape(b, tp, h, hd)[:, :t]
+        dv_full = dvs.transpose(1, 0, 2, 3, 4).reshape(b, tp, h, v.shape[-1])[:, :t]
+        return (
+            dq_full[:, :s].astype(q.dtype),
+            dk_full.astype(k.dtype),
+            dv_full.astype(v.dtype),
+        )
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def flash_mha(q, k, v, *, causal=True, window=None, scale=None, bq=512, bkv=1024):
+    """Differentiable flash attention (block-recomputing custom VJP)."""
+    return _flash_mha_fn(causal, window, scale, bq, bkv)(q, k, v)
+
+
+def _sdpa_flashvjp(q, k, v, cfg: ArchConfig):
+    kq = jnp.repeat(k, cfg.q_per_kv, axis=2)
+    vq = jnp.repeat(v, cfg.q_per_kv, axis=2)
+    return flash_mha(
+        q, kq, vq, causal=True,
+        window=cfg.window if cfg.attention == "swa" else None,
+    )
+
+
+def _sdpa_chunked(q, k, v, cfg: ArchConfig):
+    """GQA via chunked_mha (KV broadcast to Q heads, O(block) memory)."""
+    kq = jnp.repeat(k, cfg.q_per_kv, axis=2)
+    vq = jnp.repeat(v, cfg.q_per_kv, axis=2)
+    return chunked_mha(
+        q, kq, vq, causal=True,
+        window=cfg.window if cfg.attention == "swa" else None,
+    )
+
+
+def _sdpa_flash(q, k, v, cfg: ArchConfig):
+    """Train-path flash kernel (KV broadcast to Q heads; see ops docstring)."""
+    from repro.kernels.attention import flash_attention
+
+    b, s, hq, hd = q.shape
+    kq = jnp.repeat(k, cfg.q_per_kv, axis=2)
+    vq = jnp.repeat(v, cfg.q_per_kv, axis=2)
+    o = flash_attention(
+        q.transpose(0, 2, 1, 3),
+        kq.transpose(0, 2, 1, 3),
+        vq.transpose(0, 2, 1, 3),
+        causal=True,
+        window=cfg.window if cfg.attention == "swa" else None,
+    )
+    return o.transpose(0, 2, 1, 3)
+
+
+def gqa_fwd(params: dict, x: jax.Array, cfg: ArchConfig, positions: jax.Array):
+    """Full-sequence self attention.  x: (B, S, d), positions: (S,)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = ops.matmul(x, params["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = ops.matmul(x, params["wk"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = ops.matmul(x, params["wv"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.window if cfg.attention == "swa" else None
+    impl = _ATTN_IMPL.get()
+    if impl == "flash":
+        o = _sdpa_flash(q, k, v, cfg)
+    elif impl == "chunked":
+        o = _sdpa_chunked(q, k, v, cfg)
+    elif impl == "flashvjp":
+        o = _sdpa_flashvjp(q, k, v, cfg)
+    else:
+        o = _sdpa(q, k, v, _mask(positions, positions, window), cfg.q_per_kv)
+    y = ops.matmul(o.reshape(b, s, -1), params["wo"].astype(x.dtype))
+    return y, (k, v)
+
+
+# -- KV cache ----------------------------------------------------------------
+
+
+def init_gqa_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
+    """Cache for one layer.  SWA archs get a ring buffer of `window` slots."""
+    size = min(max_len, cfg.window) if cfg.attention == "swa" else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def gqa_prime_cache(cache: dict, k: jax.Array, v: jax.Array, s: int) -> dict:
+    """Fill a cache from prefill keys/values (keep the trailing window)."""
+    size = cache["k"].shape[1]
+    take = min(size, s)
+    kk = k[:, s - take : s]
+    vv = v[:, s - take : s]
+    slots = jnp.arange(size)
+    if size >= s:
+        pos = jnp.where(slots < take, slots, -1)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], kk, (0, 0, 0, 0)
+        )
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vv, (0, 0, 0, 0)
+        )
+        cache["pos"] = pos
+        return cache
+    # ring: absolute position p lives at slot p % size
+    first_abs = s - take
+    abs_pos = first_abs + jnp.arange(take)
+    slot_of = abs_pos % size
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[:, slot_of].set(kk)
+    cache["v"] = cache["v"].at[:, slot_of].set(vv)
+    cache["pos"] = cache["pos"].at[slot_of].set(abs_pos)
+    return cache
+
+
+def gqa_decode(
+    params: dict, x: jax.Array, cfg: ArchConfig, cache: dict, pos: jax.Array
+):
+    """One-token decode.  x: (B, 1, d), pos: scalar int32 absolute position."""
+    b, _, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = ops.matmul(x, params["wq"].astype(x.dtype)).reshape(b, 1, cfg.n_heads, hd)
+    k = ops.matmul(x, params["wk"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = ops.matmul(x, params["wv"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    posv = pos[None] if pos.ndim == 0 else pos
+    q = layers.apply_rope(q, posv, cfg.rope_theta)
+    k = layers.apply_rope(k, posv, cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = pos % size
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+
+    window = cfg.window if cfg.attention == "swa" else None
+    valid = (cpos >= 0) & (cpos <= pos)
+    if window is not None:
+        valid &= cpos > pos - window
+    scores_mask = valid[None, :]  # (1, T) applies to the single query row
+
+    qg = q.reshape(b, 1, cfg.n_kv_heads, cfg.q_per_kv, hd)
+    scores = jnp.einsum(
+        "bsgqd,btgd->bgqst", qg, ck, preferred_element_type=jnp.float32
+    ) * (hd**-0.5)
+    # decode scores (B, g, q, 1, T): q-head dim first, else split-K over T
+    scores = constrain_pref(scores, 0, (2, 4))
+    scores = jnp.where(scores_mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bgqst,btgd->bsgqd", w.astype(cv.dtype), cv)
+    o = o.reshape(b, 1, cfg.n_heads * hd)
+    y = ops.matmul(o, params["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": layers._dense_init(ks[0], d, m.q_lora_rank),
+        "q_norm": layers.init_rmsnorm(m.q_lora_rank),
+        "wq_b": layers._dense_init(ks[1], m.q_lora_rank, h * qk_head),
+        "wkv_a": layers._dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim),
+        "kv_norm": layers.init_rmsnorm(m.kv_lora_rank),
+        "wkv_b": layers._dense_init(
+            ks[3], m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)
+        ),
+        "wo": layers._dense_init(ks[4], h * m.v_head_dim, d),
+    }
+
+
+def _mla_qkv(params, x, cfg, positions):
+    """Shared projection path.  Returns q_nope, q_rope, c_kv, k_rope."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_lat = layers.rmsnorm(
+        params["q_norm"], ops.matmul(x, params["wq_a"].astype(x.dtype)), cfg.norm_eps
+    )
+    q = ops.matmul(q_lat, params["wq_b"].astype(x.dtype)).reshape(
+        b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim
+    )
+    q_nope, q_rope = (
+        q[..., : m.qk_nope_head_dim],
+        q[..., m.qk_nope_head_dim :],
+    )
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = ops.matmul(x, params["wkv_a"].astype(x.dtype))
+    c_kv = layers.rmsnorm(params["kv_norm"], kv[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank :][:, :, None, :]  # (B,S,1,rope)
+    k_rope = layers.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_fwd(params: dict, x: jax.Array, cfg: ArchConfig, positions: jax.Array):
+    """Training/prefill path (expanded K/V, standard MHA)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions)
+
+    kv = ops.matmul(c_kv, params["wkv_b"].astype(x.dtype)).reshape(
+        b, s, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim :]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    if _ATTN_IMPL.get() in ("chunked", "flashvjp"):
+        mha = flash_mha if _ATTN_IMPL.get() == "flashvjp" else chunked_mha
+        o = mha(q, k, v, causal=True, scale=scale).reshape(b, s, -1)
+    else:
+        scores = jnp.einsum(
+            "bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32
+        ) * scale
+        # MLA scores (B, H, S, T): heads (40) rarely divide TP; fall back
+        # to the query-sequence dim.
+        scores = constrain_pref(scores, 0, (1, 2))
+        mask = _mask(positions, positions, None)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v).reshape(b, s, -1)
+    y = ops.matmul(o, params["wo"].astype(x.dtype))
+    return y, (c_kv, k_rope)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def mla_prime_cache(cache: dict, c_kv: jax.Array, k_rope: jax.Array, s: int) -> dict:
+    cache = dict(cache)
+    cache["c_kv"] = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, 0, 0))
+    cache["k_rope"] = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope, (0, 0, 0)
+    )
+    size = cache["pos"].shape[0]
+    slots = jnp.arange(size)
+    cache["pos"] = jnp.where(slots < s, slots, -1)
+    return cache
+
+
+def mla_decode(
+    params: dict, x: jax.Array, cfg: ArchConfig, cache: dict, pos: jax.Array
+):
+    """Absorbed-matrix decode: attention runs in the latent space."""
+    m = cfg.mla
+    b, _, _ = x.shape
+    h = cfg.n_heads
+    posv = pos[None] if pos.ndim == 0 else pos
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, x, cfg, posv)
+
+    ck = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, pos, 0))
+    cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (pos,))
+
+    # Absorb W_uk into the query:  q_eff[h] = q_nope[h] @ W_uk[h]^T
+    wkv_b = params["wkv_b"].astype(x.dtype).reshape(
+        m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    w_uk = wkv_b[..., : m.qk_nope_head_dim]  # (lora, h, nope)
+    w_uv = wkv_b[..., m.qk_nope_head_dim :]  # (lora, h, v)
+    q_eff = jnp.einsum("bshd,lhd->bshl", q_nope, w_uk)  # (B,1,h,lora)
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s_lat = jnp.einsum("bshl,btl->bhst", q_eff, ck, preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum(
+        "bshd,btd->bhst", q_rope, cr, preferred_element_type=jnp.float32
+    )
+    scores = (s_lat + s_rope) * scale
+    scores = constrain_pref(scores, 0, (1, 3))  # heads else split-K over T
+    valid = (cpos >= 0) & (cpos <= pos)
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btl->bshl", w.astype(ck.dtype), ck)  # latent ctx
+    o = jnp.einsum("bshl,lhd->bshd", ctx, w_uv).reshape(b, 1, -1)
+    y = ops.matmul(o, params["wo"].astype(x.dtype))
+    return y, {"c_kv": ck, "k_rope": cr, "pos": cpos}

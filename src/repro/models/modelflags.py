@@ -1,0 +1,30 @@
+"""Cross-module model flags (kept tiny to avoid import cycles).
+
+  unroll_layers  dry-run cost probes: unroll layer stacks AND the chunked
+                 attention's internal block scans so XLA's cost analysis
+                 (which counts a while body once) sees every FLOP.
+  opt(name)      perf-iteration toggles, comma-list in $REPRO_OPTS:
+                   attn-cp        context-parallel chunked attention
+                   moe-tp-expert  TP-only expert weights (no FSDP dim)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+
+LAYER_UNROLL = contextvars.ContextVar("repro_layer_unroll", default=False)
+
+
+@contextlib.contextmanager
+def unroll_layers():
+    token = LAYER_UNROLL.set(True)
+    try:
+        yield
+    finally:
+        LAYER_UNROLL.reset(token)
+
+
+def opt(name: str) -> bool:
+    return name in os.environ.get("REPRO_OPTS", "").split(",")

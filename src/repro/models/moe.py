@@ -1,0 +1,164 @@
+"""Mixture-of-Experts: top-k router + sort-based capacity dispatch + grouped GEMM.
+
+Dispatch is the sort-based "dropping" formulation (MaxText-style, TPU
+production-proven): flatten (token, choice) slots, sort by expert, compute
+position-in-expert, scatter into a dense (E, C, d) buffer, run the grouped
+systolic GEMM, gather-combine weighted by router probabilities.  Out-of-
+capacity slots drop via JAX's out-of-bounds scatter semantics (mode='drop').
+
+EP-friendliness (the part that matters at mesh scale): dispatch runs in
+``dispatch_groups`` independent token groups (default: one per batch row on
+the big meshes, set by the launcher via ``MoEConfig.dispatch_groups``), so
+the argsort/scatter stay *local to a batch shard* and GSPMD's only
+cross-device traffic is the (G, E, C, d) buffer all-to-all between the
+batch axes and the expert ("model") axis -- the canonical EP exchange.
+Capacity is per-group, the standard per-device-capacity semantics.
+
+Under the `(pod, data, model)` mesh the (G, E, C, d) buffer shards G over
+the batch axes and E over `model` (EP); the expert compute itself is three
+grouped GEMMs (gate/up/down) through ``repro.core.ops.grouped_matmul`` --
+the paper's kernel with an expert grid dimension (see kernels/grouped).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops
+from repro.distributed.annotate import constrain
+from repro.models import layers
+from repro.models.config import ArchConfig
+
+
+def _round_up(x: int, q: int) -> int:
+    return (x + q - 1) // q * q
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d, ff = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    scale = d**-0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, m.n_experts)) * scale),
+        "w_gate": (jax.random.normal(ks[1], (m.n_experts, d, ff)) * scale),
+        "w_up": (jax.random.normal(ks[2], (m.n_experts, d, ff)) * scale),
+        "w_down": (jax.random.normal(ks[3], (m.n_experts, ff, d)) * (ff**-0.5)),
+    }
+    if m.n_shared_experts:
+        p["shared"] = layers.init_swiglu(ks[4], d, ff * m.n_shared_experts)
+    return p
+
+
+def capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(tokens_per_group * m.top_k / m.n_experts * m.capacity_factor)
+    return max(8, _round_up(c, 8))
+
+
+def _dispatch_group(xf, top_e, top_w, cap: int, cfg: ArchConfig):
+    """One group's sort-based dispatch.  xf: (T, d); top_e/top_w: (T, k).
+    -> (xdisp (E, C, d), se, pos, stok, sw) for the combine."""
+    m = cfg.moe
+    t, d = xf.shape
+    k, e = m.top_k, m.n_experts
+    flat_e = top_e.reshape(t * k)
+    flat_w = top_w.reshape(t * k).astype(xf.dtype)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+
+    order = jnp.argsort(flat_e)  # stable
+    se = flat_e[order]
+    stok = flat_tok[order]
+    # position within expert: rank - start-of-expert (one-hot cumsum form,
+    # vmap-safe where bincount is not)
+    sizes = jnp.sum(jax.nn.one_hot(flat_e, e, dtype=jnp.int32), axis=0)
+    starts = jnp.concatenate([jnp.zeros((1,), sizes.dtype), jnp.cumsum(sizes)[:-1]])
+    pos = jnp.arange(t * k) - starts[se]
+
+    xdisp = jnp.zeros((e, cap, d), xf.dtype)
+    xdisp = xdisp.at[se, pos].add(xf[stok], mode="drop")
+    return xdisp, se, pos, stok, flat_w[order]
+
+
+def _combine_group(out, se, pos, stok, sw, t: int, cap: int, dtype):
+    """Inverse of dispatch: gather expert outputs back to token order."""
+    d = out.shape[-1]
+    keep = (pos < cap)[:, None].astype(dtype)
+    slot_y = out[se, jnp.minimum(pos, cap - 1)] * keep  # (T*k, d)
+    return jnp.zeros((t, d), dtype).at[stok].add(slot_y * sw[:, None])
+
+
+def _topk_shardable(probs: jax.Array, k: int):
+    """Iterative masked-argmax top-k.  ``jax.lax.top_k`` lowers to a sort
+    that GSPMD all-gathers over the batch dim (measured: 4x 512 MiB per MoE
+    layer); k rounds of argmax+mask are elementwise/reduce ops that stay
+    batch-sharded.  k is 8 -- the rounds are noise next to the expert GEMMs."""
+    rest = probs
+    ws, es = [], []
+    for _ in range(k):
+        e = jnp.argmax(rest, axis=-1)
+        w = jnp.max(rest, axis=-1)
+        ws.append(w)
+        es.append(e)
+        rest = rest * (1.0 - jax.nn.one_hot(e, probs.shape[-1], dtype=probs.dtype))
+    return jnp.stack(ws, axis=-1), jnp.stack(es, axis=-1).astype(jnp.int32)
+
+
+def moe_fwd(params: dict, x: jax.Array, cfg: ArchConfig):
+    """x: (B, S, d) -> (y, aux_loss).  Capacity-dropping top-k MoE."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    g = m.dispatch_groups
+    if t % g:
+        raise ValueError(f"tokens {t} not divisible by dispatch_groups {g}")
+    tg = t // g
+    xf = x.reshape(t, d)
+
+    # --- route (fp32 for numerics) -----------------------------------------
+    logits = ops.matmul(xf, params["router"].astype(xf.dtype), out_dtype=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    top_w, top_e = _topk_shardable(probs, m.top_k)  # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # --- aux load-balance loss (Switch eq. 4-6) -----------------------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], m.n_experts, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = m.aux_loss_weight * m.n_experts * jnp.sum(frac_tokens * frac_probs)
+
+    # --- grouped sort-based dispatch ----------------------------------------
+    # Constraint placement is the EP trick: the scatter builds xdisp
+    # BATCH-sharded (G local, E unsharded) so the data-dependent scatter is
+    # shard-LOCAL; only then is the E dim constrained onto "model" (a dense
+    # resharding GSPMD lowers as slicing/all-to-all, never as the 4 GiB
+    # masked all-reduce a scatter-into-E-sharded buffer costs).  The
+    # combine mirrors it: un-shard E densely, then gather locally.
+    cap = capacity(tg, cfg)
+    xg = xf.reshape(g, tg, d)
+    eg = top_e.reshape(g, tg, m.top_k)
+    wg = top_w.reshape(g, tg, m.top_k)
+    xdisp, se, pos, stok, sw = jax.vmap(
+        lambda xx, ee, ww: _dispatch_group(xx, ee, ww, cap, cfg)
+    )(xg, eg, wg)
+    xdisp = constrain(xdisp, ("pod", "data"), None, None, None)  # scatter local
+
+    # --- expert compute: grouped systolic GEMMs ------------------------------
+    wdt = x.dtype
+    gate = ops.grouped_matmul(xdisp, params["w_gate"].astype(wdt))
+    up = ops.grouped_matmul(xdisp, params["w_up"].astype(wdt))
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(wdt) * up
+    out = ops.grouped_matmul(h, params["w_down"].astype(wdt))  # (G, E, C, d)
+    out = constrain(out, ("pod", "data"), None, None, None)  # combine local
+
+    # --- combine --------------------------------------------------------------
+    y = jax.vmap(
+        lambda oo, a, p_, tt, w_: _combine_group(oo, a, p_, tt, w_, tg, cap, x.dtype)
+    )(out, se, pos, stok, sw)
+    y = y.reshape(t, d)
+
+    if m.n_shared_experts:
+        y = y + layers.swiglu(params["shared"], xf)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,49 @@
+"""ArchConfig -> bound model functions.
+
+A ``Model`` is just the transformer module's pure functions partially applied
+to one config -- the launcher, trainer, server, and dry-run all consume this
+interface and nothing else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+
+from repro.models import transformer
+from repro.models.config import ArchConfig, active_params, count_params
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    forward: Callable[..., Any]
+    loss_fn: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    prefill: Callable[..., Any]
+
+    @property
+    def n_params(self) -> int:
+        return count_params(self.cfg)
+
+    @property
+    def n_active_params(self) -> int:
+        return active_params(self.cfg)
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    cfg.validate()
+    return Model(
+        cfg=cfg,
+        init=functools.partial(transformer.init_model, cfg=cfg),
+        forward=functools.partial(transformer.forward, cfg=cfg),
+        loss_fn=functools.partial(transformer.loss_fn, cfg=cfg),
+        init_cache=functools.partial(transformer.init_cache, cfg),
+        decode_step=functools.partial(transformer.decode_step, cfg=cfg),
+        prefill=functools.partial(transformer.prefill, cfg=cfg),
+    )

@@ -1,0 +1,577 @@
+"""State-space / recurrent blocks: xLSTM (mLSTM + sLSTM) and Mamba2 (SSD).
+
+Both families expose a *parallel* path for training/prefill and a *recurrent*
+single-token path for decode (O(1) state -- what makes long_500k runnable).
+
+  mLSTM  -- stabilized parallel form (xLSTM paper, eqs. 19-27): decay matrix
+            D from forget-gate log-sigmoid cumsums, max-stabilized.
+  sLSTM  -- exponential-gated scalar LSTM with per-head block-diagonal
+            recurrence; train path is a lax.scan over time.
+  Mamba2 -- SSD chunked algorithm (intra-chunk quadratic + inter-chunk state
+            scan).  The intra-chunk quadratic and the state outer products
+            are GEMMs and inherit the paper's blocking discipline.
+
+All dense projections route through repro.core.ops.matmul.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops
+from repro.models import layers
+from repro.models.config import ArchConfig
+
+
+def _dense(key, i, o):
+    return jax.random.normal(key, (i, o)) * (i**-0.5)
+
+
+# ===========================================================================
+# mLSTM (matrix-memory LSTM)
+# ===========================================================================
+
+
+def init_mlstm(key, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = cfg.n_heads
+    assert di % nh == 0
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": _dense(ks[0], d, 2 * di),  # (inner, z-gate)
+        "conv_w": jax.random.normal(ks[1], (s.conv_kernel, di)) * 0.1,
+        "wq": _dense(ks[2], di, di),
+        "wk": _dense(ks[3], di, di),
+        "wv": _dense(ks[4], di, di),
+        "w_if": _dense(ks[5], di, 2 * nh),  # input & forget gate pre-acts
+        "b_if": jnp.concatenate([jnp.zeros(nh), jnp.linspace(3.0, 6.0, nh)]),
+        "skip_norm": layers.init_rmsnorm(di),
+        "w_down": _dense(ks[6], di, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal 1D conv.  x: (B, T, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+
+
+def mlstm_fwd(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Parallel (stabilized) mLSTM.  x: (B, T, d) -> (B, T, d)."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    di = s.expand * d
+    nh = cfg.n_heads
+    hd = di // nh
+
+    up = ops.matmul(x, params["w_up"].astype(x.dtype))
+    inner, z = up[..., :di], up[..., di:]
+    conv = jax.nn.silu(
+        _causal_conv(inner.astype(jnp.float32), params["conv_w"]).astype(x.dtype)
+    )
+    q = ops.matmul(conv, params["wq"].astype(x.dtype)).reshape(b, t, nh, hd)
+    k = ops.matmul(conv, params["wk"].astype(x.dtype)).reshape(b, t, nh, hd)
+    v = ops.matmul(inner, params["wv"].astype(x.dtype)).reshape(b, t, nh, hd)
+
+    gates = (
+        ops.matmul(conv, params["w_if"].astype(x.dtype), out_dtype=jnp.float32)
+        + params["b_if"]
+    )
+    i_pre, f_pre = gates[..., :nh], gates[..., nh:]  # (B, T, nh)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    a = jnp.cumsum(log_f, axis=1)  # (B, T, nh) cumulative log decay
+
+    # D_tilde[t, s] = a_t - a_s + i_s  for s <= t
+    d_t = a[:, :, None, :] - a[:, None, :, :] + i_pre[:, None, :, :]
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    d_t = jnp.where(causal[None, :, :, None], d_t, -jnp.inf)
+    m = jnp.max(d_t, axis=2, keepdims=True)  # stabilizer per (b, t, h)
+    dmat = jnp.exp(d_t - m)  # (B, T, T, nh)
+
+    scores = jnp.einsum(
+        "bthd,bshd->btsh", q, k, preferred_element_type=jnp.float32
+    ) * (hd**-0.5)
+    sw = scores * dmat
+    norm = jnp.maximum(jnp.abs(jnp.sum(sw, axis=2)), jnp.exp(-m[:, :, 0]))
+    h = jnp.einsum("btsh,bshd->bthd", sw.astype(v.dtype), v)
+    h = (h / norm[..., None].astype(h.dtype)).reshape(b, t, di)
+    h = layers.rmsnorm(params["skip_norm"], h, cfg.norm_eps) + conv
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return ops.matmul(h, params["w_down"].astype(x.dtype))
+
+
+def mlstm_fwd_chunked(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Chunkwise-parallel stabilized mLSTM (TFLA-style), O(T*chunk) memory.
+
+    The quadratic form above materializes a (B, T, T, nh) decay matrix --
+    fine as a small-T oracle, impossible at 4k+ context.  This is the same
+    computation chunked with the paper's blocking discipline: per-chunk
+    quadratic (intra) + a recurrent matrix-memory state flowing between
+    chunks (inter), with the exp-gate max-stabilizers carried exactly.
+
+    Cost-analysis note: all matmuls here are vectorized over chunks; the
+    only ``lax.scan`` bodies are elementwise state/stabilizer updates, so
+    XLA's body-counted-once cost accounting loses no meaningful FLOPs.
+    """
+    s = cfg.ssm
+    b, t, d = x.shape
+    di = s.expand * d
+    nh = cfg.n_heads
+    hd = di // nh
+    q_c = s.chunk_size
+    assert t % q_c == 0, (t, q_c)
+    nc = t // q_c
+
+    up = ops.matmul(x, params["w_up"].astype(x.dtype))
+    inner, z = up[..., :di], up[..., di:]
+    conv = jax.nn.silu(
+        _causal_conv(inner.astype(jnp.float32), params["conv_w"]).astype(x.dtype)
+    )
+    q = ops.matmul(conv, params["wq"].astype(x.dtype)).reshape(b, t, nh, hd)
+    k = ops.matmul(conv, params["wk"].astype(x.dtype)).reshape(b, t, nh, hd)
+    v = ops.matmul(inner, params["wv"].astype(x.dtype)).reshape(b, t, nh, hd)
+    gates = (
+        ops.matmul(conv, params["w_if"].astype(x.dtype), out_dtype=jnp.float32)
+        + params["b_if"]
+    )
+    i_pre, f_pre = gates[..., :nh], gates[..., nh:]  # (B, T, nh)
+    log_f = jax.nn.log_sigmoid(f_pre)
+
+    # chunked views: (B, nc, Q, ...)
+    r = lambda a: a.reshape(b, nc, q_c, *a.shape[2:])
+    qc, kc, vc = r(q), r(k), r(v)
+    ic, lfc = r(i_pre), r(log_f)
+    kf = kc.astype(jnp.float32) * (hd**-0.5)
+
+    fcum = jnp.cumsum(lfc, axis=2)  # F_t within chunk (B, nc, Q, H)
+    g = fcum[:, :, -1, :]  # total chunk decay (B, nc, H)
+
+    # ---- per-chunk summaries with LOCAL stabilizers (vectorized) ----------
+    # a_s = g - F_s + i_s : weight of source s into the end-of-chunk state
+    a_src = g[:, :, None, :] - fcum + ic  # (B, nc, Q, H)
+    m_loc = jnp.max(a_src, axis=2)  # (B, nc, H)
+    w_src = jnp.exp(a_src - m_loc[:, :, None, :])  # (B, nc, Q, H)
+    s_c = jnp.einsum(
+        "bcqhk,bcqhv->bchkv",
+        kf * w_src[..., None],
+        vc.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )  # (B, nc, H, hd, hd)
+    n_c = jnp.sum(kf * w_src[..., None], axis=2)  # (B, nc, H, hd)
+
+    # ---- stabilizer scan (scalar per (B, H); elementwise body) -------------
+    def m_step(m_prev, xs):
+        g_c, ml_c = xs  # (B, H) each
+        m_next = jnp.maximum(m_prev + g_c, ml_c)
+        return m_next, m_prev
+
+    m0 = jnp.full((b, nh), -jnp.inf, jnp.float32)
+    _, m_prevs = jax.lax.scan(
+        m_step, m0, (g.transpose(1, 0, 2), m_loc.transpose(1, 0, 2))
+    )
+    m_prevs = m_prevs.transpose(1, 0, 2)  # m_{c-1} per chunk (B, nc, H)
+    m_curr = jnp.maximum(m_prevs + g, m_loc)  # m_c per chunk
+
+    # ---- state scan (elementwise; matmul-free body) -------------------------
+    decay_c = jnp.exp(m_prevs + g - m_curr)  # carry scale (B, nc, H)
+    inject_c = jnp.exp(m_loc - m_curr)  # local-sum scale
+
+    def state_step(carry, xs):
+        c_prev, n_prev = carry
+        dec, inj, s_cc, n_cc = xs
+        c_new = c_prev * dec[..., None, None] + inj[..., None, None] * s_cc
+        n_new = n_prev * dec[..., None] + inj[..., None] * n_cc
+        return (c_new, n_new), (c_prev, n_prev)
+
+    c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    (_, _), (c_prevs, n_prevs) = jax.lax.scan(
+        state_step,
+        (c0, n0),
+        (
+            decay_c.transpose(1, 0, 2),
+            inject_c.transpose(1, 0, 2),
+            s_c.transpose(1, 0, 2, 3, 4),
+            n_c.transpose(1, 0, 2, 3),
+        ),
+    )
+    c_prevs = c_prevs.transpose(1, 0, 2, 3, 4)  # C_{c-1} (B, nc, H, hd, hd)
+    n_prevs = n_prevs.transpose(1, 0, 2, 3)  # n_{c-1} (B, nc, H, hd)
+
+    # ---- outputs (vectorized over chunks) -----------------------------------
+    # intra: D[t, s] = F_t - F_s + i_s  (s <= t)
+    d_ts = fcum[:, :, :, None, :] - fcum[:, :, None, :, :] + ic[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((q_c, q_c), bool))
+    d_ts = jnp.where(causal[None, None, :, :, None], d_ts, -jnp.inf)
+    m_intra = jnp.max(d_ts, axis=3)  # (B, nc, Q, H)
+    # inter weight exponent: F_t + m_{c-1}
+    b_inter = fcum + m_prevs[:, :, None, :]
+    m_t = jnp.maximum(m_intra, b_inter)  # (B, nc, Q, H)
+    w_intra = jnp.exp(d_ts - m_t[:, :, :, None, :])  # (B, nc, Q, Q, H)
+    w_inter = jnp.exp(b_inter - m_t)  # (B, nc, Q, H)
+
+    scores = jnp.einsum(
+        "bcthd,bcshd->bctsh", qc.astype(jnp.float32), kf,
+        preferred_element_type=jnp.float32,
+    )
+    sw = scores * w_intra
+    h_intra = jnp.einsum(
+        "bctsh,bcshd->bcthd", sw, vc.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    qf = qc.astype(jnp.float32)
+    h_inter = (
+        jnp.einsum("bcthd,bchdv->bcthv", qf, c_prevs) * w_inter[..., None]
+    )
+    den_intra = jnp.sum(sw, axis=3)  # (B, nc, Q, H)
+    den_inter = jnp.einsum("bcthd,bchd->bcth", qf, n_prevs) * w_inter
+    den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+    h = (h_intra + h_inter) / den[..., None]
+
+    h = h.reshape(b, t, di).astype(x.dtype)
+    h = layers.rmsnorm(params["skip_norm"], h, cfg.norm_eps) + conv
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return ops.matmul(h, params["w_down"].astype(x.dtype))
+
+
+def mlstm_auto(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Chunked form when the sequence divides the chunk size (production
+    path); quadratic oracle otherwise (small tests)."""
+    t = x.shape[1]
+    q_c = cfg.ssm.chunk_size
+    if t > q_c and t % q_c == 0:
+        return mlstm_fwd_chunked(params, x, cfg)
+    return mlstm_fwd(params, x, cfg)
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = cfg.n_heads
+    hd = di // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, di), dtype),
+    }
+
+
+def mlstm_step(params: dict, x: jax.Array, cfg: ArchConfig, state: dict):
+    """One-token recurrent mLSTM.  x: (B, 1, d)."""
+    s = cfg.ssm
+    b, _, d = x.shape
+    di = s.expand * d
+    nh = cfg.n_heads
+    hd = di // nh
+
+    up = ops.matmul(x[:, 0], params["w_up"].astype(x.dtype))
+    inner, z = up[..., :di], up[..., di:]
+    win = jnp.concatenate([state["conv"], inner[:, None]], axis=1)  # (B, K, di)
+    conv = jax.nn.silu(
+        jnp.sum(win.astype(jnp.float32) * params["conv_w"], axis=1)
+    ).astype(x.dtype)
+    q = ops.matmul(conv, params["wq"].astype(x.dtype)).reshape(b, nh, hd)
+    k = ops.matmul(conv, params["wk"].astype(x.dtype)).reshape(b, nh, hd)
+    v = ops.matmul(inner, params["wv"].astype(x.dtype)).reshape(b, nh, hd)
+    gates = (
+        ops.matmul(conv, params["w_if"].astype(x.dtype), out_dtype=jnp.float32)
+        + params["b_if"]
+    )
+    i_pre, f_pre = gates[..., :nh], gates[..., nh:]
+    log_f = jax.nn.log_sigmoid(f_pre)  # (B, nh)
+
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    f_eff = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    i_eff = jnp.exp(i_pre - m_new)[..., None]
+    kf = k.astype(jnp.float32) * (hd**-0.5)
+    c_new = state["C"] * f_eff[..., None] + i_eff[..., None] * (
+        kf[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    n_new = state["n"] * f_eff + i_eff * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", c_new, qf)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)), jnp.exp(-m_new)
+    )
+    h = (num / den[..., None]).reshape(b, di).astype(x.dtype)
+    h = layers.rmsnorm(params["skip_norm"], h, cfg.norm_eps) + conv
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    y = ops.matmul(h, params["w_down"].astype(x.dtype))[:, None]
+    new_state = {
+        "C": c_new,
+        "n": n_new,
+        "m": m_new,
+        "conv": win[:, 1:],
+    }
+    return y, new_state
+
+
+# ===========================================================================
+# sLSTM (scalar-memory LSTM with exponential gating)
+# ===========================================================================
+
+
+def init_slstm(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    d_up = int(4 * d / 3 / 8) * 8 or 8
+    return {
+        # 4 gates (z, i, f, o): input + per-head block-diagonal recurrent
+        "w_x": _dense(ks[0], d, 4 * d),
+        "r_h": jax.random.normal(ks[1], (nh, hd, 4 * hd)) * (hd**-0.5),
+        "b": jnp.concatenate(
+            [jnp.zeros(2 * d), jnp.ones(d) * 3.0, jnp.zeros(d)]
+        ),
+        "mlp": layers.init_swiglu(ks[2], d, d_up),
+        "mlp_norm": layers.init_rmsnorm(d),
+    }
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(params, xt, state, nh: int):
+    """xt: (B, 4d) pre-activation from input; state h fed through R."""
+    b, d4 = xt.shape
+    d = d4 // 4
+    hd = d // nh
+    h_heads = state["h"].reshape(b, nh, hd)
+    rec = jnp.einsum("bhk,hkj->bhj", h_heads, params["r_h"]).reshape(b, 4 * d)
+    pre = xt + rec + params["b"]
+    z, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_eff = jnp.exp(i_pre - m_new)
+    f_eff = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_eff * state["c"] + i_eff * z
+    n_new = f_eff * state["n"] + i_eff
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_fwd(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Sequential sLSTM (lax.scan over T) + gated MLP.  x: (B, T, d)."""
+    b, t, d = x.shape
+    nh = cfg.n_heads
+    xg = ops.matmul(x, params["w_x"].astype(x.dtype), out_dtype=jnp.float32)
+
+    def step(state, xt):
+        new = _slstm_cell(params, xt, state, nh)
+        return new, new["h"]
+
+    state0 = init_slstm_state(cfg, b, x.dtype)
+    _, hs = jax.lax.scan(step, state0, xg.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = h + layers.swiglu(params["mlp"], layers.rmsnorm(params["mlp_norm"], h, cfg.norm_eps))
+    return h
+
+
+def slstm_step(params: dict, x: jax.Array, cfg: ArchConfig, state: dict):
+    """One-token sLSTM.  x: (B, 1, d)."""
+    xg = ops.matmul(x[:, 0], params["w_x"].astype(x.dtype), out_dtype=jnp.float32)
+    new = _slstm_cell(params, xg, state, cfg.n_heads)
+    h = new["h"].astype(x.dtype)
+    h = h + layers.swiglu(params["mlp"], layers.rmsnorm(params["mlp_norm"], h, cfg.norm_eps))
+    return h[:, None], new
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+
+def init_mamba2(key, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    gn = s.n_groups * s.state_size
+    conv_ch = di + 2 * gn
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense(ks[0], d, 2 * di + 2 * gn + nh),  # z, x, B, C, dt
+        "conv_w": jax.random.normal(ks[1], (s.conv_kernel, conv_ch)) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, nh))),
+        "d_skip": jnp.ones((nh,)),
+        "gate_norm": layers.init_rmsnorm(di),
+        "out_proj": _dense(ks[2], di, d),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """L[t, s] = sum_{s < r <= t} a_r for s <= t else -inf.  a: (..., T)."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, chunk: int):
+    """SSD over one sequence.
+
+    xh: (B, T, H, P); dt: (B, T, H) (post-softplus); a: (H,) (negative);
+    bmat/cmat: (B, T, H, N) (groups already broadcast).  Returns (y, final_state)
+    where final_state: (B, H, P, N).
+    """
+    b, t, h, p = xh.shape
+    n = bmat.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    r = lambda z: z.reshape(b, nc, chunk, *z.shape[2:])
+    xc, dtc, bc, cc = r(xh), r(dt), r(bmat), r(cmat)
+
+    da = dtc * a  # (B, nc, Q, H) log-decay per step
+    da_cs = jnp.cumsum(da, axis=2)
+
+    # intra-chunk (diagonal): y[t] = sum_{s<=t} C_t.B_s exp(cum_t - cum_s) dt_s x_s
+    lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # (B, nc, H, Q, Q)
+    scores = jnp.einsum(
+        "bcthn,bcshn->bchts", cc, bc, preferred_element_type=jnp.float32
+    )
+    w = scores * lmat * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchts,bcshp->bcthp", w.astype(xh.dtype), xc)
+
+    # chunk states: S_c = sum_s exp(cum_end - cum_s) dt_s B_s x_s^T
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # (B, nc, Q, H)
+    sw = (decay_to_end * dtc)[..., None]  # (B, nc, Q, H, 1)
+    states = jnp.einsum(
+        "bcshp,bcshn->bchpn", xc * sw.astype(xh.dtype), bc,
+        preferred_element_type=jnp.float32,
+    )  # (B, nc, H, P, N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])  # (B, nc, H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # (B, H, P, N), (B, H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *before* this chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    # off-diagonal: y[t] += C_t . (exp(cum_t) * S_prev)
+    decay_from_start = jnp.exp(da_cs)  # (B, nc, Q, H)
+    y_off = jnp.einsum(
+        "bcthn,bchpn->bcthp", cc, prev_states.astype(cc.dtype)
+    ) * decay_from_start[..., None].astype(xh.dtype)
+    y = (y_diag + y_off).reshape(b, t, h, p)
+    return y, final
+
+
+def mamba2_fwd(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Parallel Mamba2 (SSD).  x: (B, T, d) -> (B, T, d)."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    di = s.expand * d
+    nh = di // s.head_dim
+    gn = s.n_groups * s.state_size
+
+    proj = ops.matmul(x, params["in_proj"].astype(x.dtype))
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * gn]
+    dt_pre = proj[..., -nh:]
+
+    conv = jax.nn.silu(
+        _causal_conv(xbc.astype(jnp.float32), params["conv_w"]) + params["conv_b"]
+    ).astype(x.dtype)
+    xin = conv[..., :di].reshape(b, t, nh, s.head_dim)
+    bmat = conv[..., di : di + gn].reshape(b, t, s.n_groups, s.state_size)
+    cmat = conv[..., di + gn :].reshape(b, t, s.n_groups, s.state_size)
+    rep = nh // s.n_groups
+    bmat = jnp.repeat(bmat, rep, axis=2)
+    cmat = jnp.repeat(cmat, rep, axis=2)
+
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])  # (H,)
+
+    pad = (-t) % s.chunk_size
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, _ = _ssd_chunked(xin, dt, a, bmat, cmat, s.chunk_size)
+    y = y[:, :t]
+    y = y + xin[:, :t] * params["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, t, di)
+    y = layers.rmsnorm(params["gate_norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return ops.matmul(y, params["out_proj"].astype(x.dtype))
+
+
+def init_mamba2_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    gn = s.n_groups * s.state_size
+    return {
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.state_size), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, di + 2 * gn), dtype),
+    }
+
+
+def mamba2_step(params: dict, x: jax.Array, cfg: ArchConfig, state: dict):
+    """One-token recurrent Mamba2.  x: (B, 1, d)."""
+    s = cfg.ssm
+    b, _, d = x.shape
+    di = s.expand * d
+    nh = di // s.head_dim
+    gn = s.n_groups * s.state_size
+
+    proj = ops.matmul(x[:, 0], params["in_proj"].astype(x.dtype))
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * gn]
+    dt_pre = proj[..., -nh:]
+
+    win = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)
+    conv = jax.nn.silu(
+        jnp.sum(win.astype(jnp.float32) * params["conv_w"], axis=1)
+        + params["conv_b"]
+    ).astype(x.dtype)
+    xin = conv[..., :di].reshape(b, nh, s.head_dim)
+    rep = nh // s.n_groups
+    bmat = jnp.repeat(
+        conv[..., di : di + gn].reshape(b, s.n_groups, s.state_size), rep, axis=1
+    )
+    cmat = jnp.repeat(
+        conv[..., di + gn :].reshape(b, s.n_groups, s.state_size), rep, axis=1
+    )
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt * a)[..., None, None]  # (B, H, 1, 1)
+
+    ssm = state["ssm"] * da + (dt[..., None] * xin.astype(jnp.float32))[
+        ..., :, None
+    ] * bmat.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, cmat.astype(jnp.float32))
+    y = y + xin.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = layers.rmsnorm(params["gate_norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = ops.matmul(y, params["out_proj"].astype(x.dtype))[:, None]
+    return out, {"ssm": ssm, "conv": win[:, 1:]}

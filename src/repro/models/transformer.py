@@ -1,0 +1,569 @@
+"""Generic decoder: scan-over-layers assembly of the substrate blocks.
+
+One module builds every assigned architecture from its ``ArchConfig``:
+
+  dense / audio / vlm   homogeneous [attn + SwiGLU] stack (GQA/SWA/MLA)
+  moe                   homogeneous [attn + MoE] stack
+  ssm (xlstm)           repeating [mLSTM x (s-1), sLSTM] groups
+  hybrid (zamba2)       repeating [Mamba2 x attn_every, shared-attn] groups
+                        (+ trailing Mamba2 layers); the shared attn+MLP
+                        block's *weights* are shared across applications,
+                        its KV caches are per-application.
+
+All layer stacks are ``lax.scan`` over stacked parameter pytrees so the HLO
+stays layer-count-independent (critical for the 94-layer dry-run compiles),
+with optional ``jax.checkpoint`` (remat) around the scan body for training.
+
+Entry points (all pure functions over dict pytrees):
+  init_model(key, cfg)                  -> params
+  forward(params, batch, cfg, remat)    -> (logits fp32, aux_loss)
+  loss_fn(params, batch, cfg, remat)    -> (loss, metrics)
+  init_cache(cfg, batch, max_len, dt)   -> cache
+  decode_step(params, tok, cfg, cache, pos) -> (logits, new_cache)
+  prefill(params, batch, cfg, max_len)  -> (logits, primed cache)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import frontends, layers, moe, ssm
+from repro.models.config import ArchConfig
+
+# Layer-stack scans lower to while loops (HLO stays layer-count-independent)
+# unless unrolled.  The dry-run's cost probes unroll so XLA's cost analysis
+# (which counts a while body ONCE) attributes per-layer FLOPs/bytes exactly.
+from repro.models.modelflags import LAYER_UNROLL, unroll_layers  # noqa: F401,E402
+
+
+def _scan(body, carry, xs):
+    return jax.lax.scan(body, carry, xs, unroll=True if LAYER_UNROLL.get() else 1)
+
+
+def _cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init function over n split keys -> stacked (n, ...) pytree."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ===========================================================================
+# Attention blocks (dense / moe / audio / vlm and the zamba2 shared block)
+# ===========================================================================
+
+
+def init_attn_block(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": layers.init_rmsnorm(cfg.d_model),
+        "ffn_norm": layers.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.attention == "mla":
+        p["attn"] = attn.init_mla(k1, cfg)
+    else:
+        p["attn"] = attn.init_gqa(k1, cfg)
+    if cfg.moe is not None:
+        p["ffn"] = moe.init_moe(k2, cfg)
+    else:
+        p["ffn"] = layers.init_swiglu(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def attn_block_fwd(p: dict, x: jax.Array, cfg: ArchConfig, positions):
+    """Pre-norm attn + residual, pre-norm FFN/MoE + residual."""
+    xin = layers.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, kv = attn.mla_fwd(p["attn"], xin, cfg, positions)
+    else:
+        a, kv = attn.gqa_fwd(p["attn"], xin, cfg, positions)
+    x = x + a
+    hin = layers.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        f, aux = moe.moe_fwd(p["ffn"], hin, cfg)
+    else:
+        f, aux = layers.swiglu(p["ffn"], hin), jnp.float32(0.0)
+    return x + f, aux, kv
+
+
+def attn_block_decode(p: dict, x: jax.Array, cfg: ArchConfig, cache, pos):
+    xin = layers.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, nc = attn.mla_decode(p["attn"], xin, cfg, cache, pos)
+    else:
+        a, nc = attn.gqa_decode(p["attn"], xin, cfg, cache, pos)
+    x = x + a
+    hin = layers.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        f, _ = moe.moe_fwd(p["ffn"], hin, cfg)
+    else:
+        f = layers.swiglu(p["ffn"], hin)
+    return x + f, nc
+
+
+def init_attn_block_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    if cfg.attention == "mla":
+        return attn.init_mla_cache(cfg, batch, max_len, dtype)
+    return attn.init_gqa_cache(cfg, batch, max_len, dtype)
+
+
+# ===========================================================================
+# SSM blocks (xlstm pairs, zamba2 mamba layers)
+# ===========================================================================
+
+
+def init_mlstm_block(key, cfg: ArchConfig) -> dict:
+    return {"norm": layers.init_rmsnorm(cfg.d_model), "core": ssm.init_mlstm(key, cfg)}
+
+
+def init_slstm_block(key, cfg: ArchConfig) -> dict:
+    return {"norm": layers.init_rmsnorm(cfg.d_model), "core": ssm.init_slstm(key, cfg)}
+
+
+def init_mamba_block(key, cfg: ArchConfig) -> dict:
+    return {"norm": layers.init_rmsnorm(cfg.d_model), "core": ssm.init_mamba2(key, cfg)}
+
+
+def _ssm_block_fwd(p, x, cfg, fwd):
+    return x + fwd(p["core"], layers.rmsnorm(p["norm"], x, cfg.norm_eps), cfg)
+
+
+def _ssm_block_step(p, x, cfg, step, state):
+    y, ns = step(p["core"], layers.rmsnorm(p["norm"], x, cfg.norm_eps), cfg, state)
+    return x + y, ns
+
+
+# ===========================================================================
+# Hybrid (zamba2) layer bookkeeping
+# ===========================================================================
+
+
+def hybrid_counts(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(n_mamba, n_shared_apps, n_groups).  Each group = attn_every mamba
+    layers + 1 shared-attn application; remaining layers are trailing mamba."""
+    period = cfg.attn_every + 1
+    n_apps = cfg.n_layers // period
+    n_mamba = cfg.n_layers - n_apps
+    return n_mamba, n_apps, n_apps
+
+
+def xlstm_counts(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_groups, n_mlstm_per_group).  Group = (s-1) mLSTM + 1 sLSTM."""
+    s = cfg.ssm.slstm_every
+    if cfg.n_layers % s:
+        raise ValueError(f"{cfg.name}: n_layers must divide slstm_every={s}")
+    return cfg.n_layers // s, s - 1
+
+
+def _split_groups(tree, n_groups: int, per_group: int):
+    """Split a stacked (N, ...) pytree into ((G, per, ...), (tail, ...))."""
+    head = n_groups * per_group
+
+    def _head(a):
+        return a[:head].reshape(n_groups, per_group, *a.shape[1:])
+
+    return (
+        jax.tree.map(_head, tree),
+        jax.tree.map(lambda a: a[head:], tree),
+    )
+
+
+# ===========================================================================
+# Model init
+# ===========================================================================
+
+
+def init_model(key, cfg: ArchConfig) -> dict:
+    cfg.validate()
+    keys = jax.random.split(key, 8)
+    params: dict = {"final_norm": layers.init_rmsnorm(cfg.d_model)}
+
+    if cfg.frontend == "audio_codec":
+        params["embed"] = frontends.init_audio_embed(keys[0], cfg)
+        params["lm_head"] = frontends.init_audio_heads(keys[1], cfg)
+    else:
+        params["embed"] = layers.init_embedding(keys[0], cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.init_dense(keys[1], cfg.d_model, cfg.vocab_size)
+    if cfg.frontend == "vit":
+        params["projector"] = frontends.init_vit_projector(keys[2], cfg)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        params["layers"] = _stack_init(
+            lambda k: init_attn_block(k, cfg), keys[3], cfg.n_layers
+        )
+    elif cfg.family == "ssm":  # xlstm
+        n_groups, n_m = xlstm_counts(cfg)
+        if n_m:
+            params["mlstm"] = _stack_init(
+                lambda k: init_mlstm_block(k, cfg), keys[3], n_groups * n_m
+            )
+        params["slstm"] = _stack_init(
+            lambda k: init_slstm_block(k, cfg), keys[4], n_groups
+        )
+    elif cfg.family == "hybrid":  # zamba2
+        n_mamba, n_apps, _ = hybrid_counts(cfg)
+        params["mamba"] = _stack_init(
+            lambda k: init_mamba_block(k, cfg), keys[3], n_mamba
+        )
+        params["shared"] = init_attn_block(keys[4], cfg)
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+    return params
+
+
+# ===========================================================================
+# Embedding / head helpers
+# ===========================================================================
+
+
+def _embed_input(params, batch: dict, cfg: ArchConfig):
+    """-> (x, n_prefix) where n_prefix counts non-text positions (vlm)."""
+    dt = _cdtype(cfg)
+    tokens = batch["tokens"]
+    if cfg.frontend == "audio_codec":
+        return frontends.audio_embed(params["embed"], tokens, dt), 0
+    x = layers.embed(params["embed"], tokens, dt)
+    if cfg.frontend == "vit":
+        proj = frontends.vit_project(
+            params["projector"], batch["patch_embeds"].astype(dt), cfg
+        )
+        x = jnp.concatenate([proj, x], axis=1)
+        return x, proj.shape[1]
+    return x, 0
+
+
+def _head(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    from repro.distributed.annotate import constrain
+
+    if cfg.frontend == "audio_codec":
+        return frontends.audio_logits(params["lm_head"], x)
+    if cfg.tie_embeddings:
+        return layers.unembed(params["embed"], x)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"]["w"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    # batch+vocab sharded, and (via the constraint's transpose rule) the
+    # same layout is pinned on d(logits) so the wgrad never batch-gathers.
+    return constrain(logits, ("pod", "data"), None, "model")
+
+
+# ===========================================================================
+# Forward
+# ===========================================================================
+
+
+def _maybe_remat(fn, remat: bool):
+    return jax.checkpoint(fn) if remat else fn
+
+
+def forward(
+    params,
+    batch: dict,
+    cfg: ArchConfig,
+    *,
+    remat: bool = False,
+    head_mode: str = "all",
+):
+    """Full-sequence forward.  batch: {"tokens": (B, S[, ncb]) int32,
+    ["patch_embeds": (B, P, vit_dim)]}.  -> (logits fp32, aux_loss).
+
+    head_mode: "all" applies the LM head to every position (training);
+    "last" only to the final position (serving prefill -- avoids the
+    (B, S, V) logits allocation at 32k prompts)."""
+    x, _ = _embed_input(params, batch, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    aux = jnp.float32(0.0)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+
+        def body(carry, lp):
+            h, a = carry
+            h, da, _ = attn_block_fwd(lp, h, cfg, positions)
+            return (h, a + da), None
+
+        (x, aux), _ = _scan(_maybe_remat(body, remat), (x, aux), params["layers"])
+
+    elif cfg.family == "ssm":
+        n_groups, n_m = xlstm_counts(cfg)
+
+        def group(h, gp):
+            if n_m:
+
+                def mbody(hh, mp):
+                    return _ssm_block_fwd(mp, hh, cfg, ssm.mlstm_auto), None
+
+                h, _ = _scan(mbody, h, gp["m"])
+            h = _ssm_block_fwd(gp["s"], h, cfg, ssm.slstm_fwd)
+            return h, None
+
+        groups = {"s": params["slstm"]}
+        if n_m:
+            groups["m"], _ = _split_groups(params["mlstm"], n_groups, n_m)
+        x, _ = _scan(_maybe_remat(group, remat), x, groups)
+
+    elif cfg.family == "hybrid":
+        n_mamba, n_apps, n_groups = hybrid_counts(cfg)
+        grp, tail = _split_groups(params["mamba"], n_groups, cfg.attn_every)
+
+        def mbody(h, mp):
+            return _ssm_block_fwd(mp, h, cfg, ssm.mamba2_fwd), None
+
+        def group(h, gp):
+            h, _ = _scan(mbody, h, gp)
+            h, _, _ = attn_block_fwd(params["shared"], h, cfg, positions)
+            return h, None
+
+        x, _ = _scan(_maybe_remat(group, remat), x, grp)
+        x, _ = _scan(mbody, x, tail)
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if head_mode == "last":
+        x = x[:, -1:]
+    return _head(params, x, cfg), aux
+
+
+# ===========================================================================
+# Loss
+# ===========================================================================
+
+
+def _ce(logits: jax.Array, labels: jax.Array, mask=None):
+    """Token-mean cross entropy.  logits fp32 (..., V), labels int (...).
+
+    The gold logit is gathered with a one-hot einsum rather than
+    ``take_along_axis``: the latter's backward is a data-dependent scatter
+    into (B, S, V) that GSPMD cannot shard (it all-gathers d(logits) over
+    the batch axis -- a 40 GB collective per step at train_4k scale); the
+    one-hot contraction keeps both forward and backward batch+vocab
+    sharded."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("...v,...v->...", logits, onehot)
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, *, remat: bool = False):
+    """-> (scalar loss, metrics dict).  batch must contain "labels"
+    aligned with the *text* positions of "tokens" (already shifted)."""
+    logits, aux = forward(params, batch, cfg, remat=remat)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if cfg.frontend == "vit":
+        n_prefix = logits.shape[1] - labels.shape[1]
+        logits = logits[:, n_prefix:]
+    if cfg.frontend == "audio_codec":
+        # (B, S, ncb, V) vs (B, S, ncb): mean over codebooks as well.
+        if mask is not None:
+            mask = jnp.broadcast_to(mask[..., None], labels.shape)
+        ce = _ce(logits, labels, mask)
+    else:
+        ce = _ce(logits, labels, mask)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+# ===========================================================================
+# KV / state caches
+# ===========================================================================
+
+
+def _stack_cache(make_one, n: int):
+    """Build n structurally-identical caches as one stacked pytree."""
+    one = make_one()
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n, *a.shape)).copy(), one)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or _cdtype(cfg)
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return {
+            "layers": _stack_cache(
+                lambda: init_attn_block_cache(cfg, batch, max_len, dtype),
+                cfg.n_layers,
+            )
+        }
+    if cfg.family == "ssm":
+        n_groups, n_m = xlstm_counts(cfg)
+        c = {
+            "slstm": _stack_cache(
+                lambda: ssm.init_slstm_state(cfg, batch, dtype), n_groups
+            )
+        }
+        if n_m:
+            c["mlstm"] = _stack_cache(
+                lambda: ssm.init_mlstm_state(cfg, batch, dtype), n_groups * n_m
+            )
+        return c
+    if cfg.family == "hybrid":
+        n_mamba, n_apps, _ = hybrid_counts(cfg)
+        return {
+            "mamba": _stack_cache(
+                lambda: ssm.init_mamba2_state(cfg, batch, dtype), n_mamba
+            ),
+            "shared": _stack_cache(
+                lambda: init_attn_block_cache(cfg, batch, max_len, dtype), n_apps
+            ),
+        }
+    raise ValueError(cfg.family)  # pragma: no cover
+
+
+# ===========================================================================
+# Decode (one token)
+# ===========================================================================
+
+
+def decode_step(params, tokens: jax.Array, cfg: ArchConfig, cache: dict, pos):
+    """tokens: (B, 1[, ncb]) int32; pos: scalar int32 absolute position.
+    -> (logits fp32 (B, 1[, ncb], V), new cache)."""
+    dt = _cdtype(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    if cfg.frontend == "audio_codec":
+        x = frontends.audio_embed(params["embed"], tokens, dt)
+    else:
+        x = layers.embed(params["embed"], tokens, dt)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+
+        def body(h, lpc):
+            lp, lc = lpc
+            h, nc = attn_block_decode(lp, h, cfg, lc, pos)
+            return h, nc
+
+        x, new_layers = _scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    elif cfg.family == "ssm":
+        n_groups, n_m = xlstm_counts(cfg)
+        new_cache = {}
+
+        def group(h, gpc):
+            if n_m:
+
+                def mbody(hh, mpc):
+                    mp, mc = mpc
+                    hh, nmc = _ssm_block_step(mp, hh, cfg, ssm.mlstm_step, mc)
+                    return hh, nmc
+
+                h, nm = _scan(mbody, h, (gpc["mp"], gpc["mc"]))
+            else:
+                nm = None
+            h, ns = _ssm_block_step(gpc["sp"], h, cfg, ssm.slstm_step, gpc["sc"])
+            return h, {"m": nm, "s": ns}
+
+        gpc = {"sp": params["slstm"], "sc": cache["slstm"]}
+        if n_m:
+            mp, _ = _split_groups(params["mlstm"], n_groups, n_m)
+            mc, _ = _split_groups(cache["mlstm"], n_groups, n_m)
+            gpc["mp"], gpc["mc"] = mp, mc
+        x, out = _scan(group, x, gpc)
+        new_cache["slstm"] = out["s"]
+        if n_m:
+            new_cache["mlstm"] = jax.tree.map(
+                lambda a: a.reshape(n_groups * n_m, *a.shape[2:]), out["m"]
+            )
+
+    elif cfg.family == "hybrid":
+        n_mamba, n_apps, n_groups = hybrid_counts(cfg)
+        gp, tail_p = _split_groups(params["mamba"], n_groups, cfg.attn_every)
+        gc, tail_c = _split_groups(cache["mamba"], n_groups, cfg.attn_every)
+
+        def mbody(h, mpc):
+            mp, mc = mpc
+            h, nmc = _ssm_block_step(mp, h, cfg, ssm.mamba2_step, mc)
+            return h, nmc
+
+        def group(h, gpc_):
+            h, nm = _scan(mbody, h, (gpc_["p"], gpc_["c"]))
+            h, na = attn_block_decode(params["shared"], h, cfg, gpc_["a"], pos)
+            return h, {"m": nm, "a": na}
+
+        x, out = _scan(group, x, {"p": gp, "c": gc, "a": cache["shared"]})
+        x, new_tail = _scan(mbody, x, (tail_p, tail_c))
+        new_mamba = jax.tree.map(
+            lambda g, t: jnp.concatenate(
+                [g.reshape(n_groups * cfg.attn_every, *g.shape[2:]), t], axis=0
+            ),
+            out["m"],
+            new_tail,
+        )
+        new_cache = {"mamba": new_mamba, "shared": out["a"]}
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _head(params, x, cfg), new_cache
+
+
+# ===========================================================================
+# Prefill (examples / serving; returns primed caches)
+# ===========================================================================
+
+
+def prefill(params, batch: dict, cfg: ArchConfig, max_len: int):
+    """Run the full prompt, prime a decode cache.  -> (last logits, cache).
+
+    Returns logits for the LAST position only ((B, 1[, ncb], V)) -- serving
+    samples the first continuation token from it, and it avoids the
+    (B, 32k, V) logits allocation.  Attention families prime KV caches from
+    the parallel forward; SSM and hybrid families scan ``decode_step`` over
+    the prompt (state caches are sequential by nature).  Serving-scale
+    prefill for hybrids would chunk this; for the framework examples the
+    scan is exact and sufficient.
+    """
+    dt = _cdtype(cfg)
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    cache = init_cache(cfg, b, max_len, dt)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        x, _ = _embed_input(params, batch, cfg)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        def body(h, lp):
+            h, _, kv = attn_block_fwd(lp, h, cfg, positions)
+            return h, kv
+
+        x, kvs = _scan(body, x, params["layers"])
+
+        if cfg.attention == "mla":
+            prime = jax.vmap(
+                lambda c, ckv, kr: attn.mla_prime_cache(c, ckv, kr, s)
+            )
+        else:
+            prime = jax.vmap(lambda c, k, v: attn.gqa_prime_cache(c, k, v, s))
+        cache = {"layers": prime(cache["layers"], *kvs)}
+        x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        return _head(params, x, cfg), cache
+
+    # Sequential families: scan decode_step over the prompt, carrying only
+    # the newest logits (constant memory in prompt length).
+    if cfg.frontend == "audio_codec":
+        logits0 = jnp.zeros((b, 1, cfg.n_codebooks, cfg.vocab_size), jnp.float32)
+    else:
+        logits0 = jnp.zeros((b, 1, cfg.vocab_size), jnp.float32)
+
+    def step(carry, si):
+        c, _ = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, si, 1, axis=1)
+        logits, c = decode_step(params, tok, cfg, c, si)
+        return (c, logits), None
+
+    (cache, logits), _ = jax.lax.scan(
+        step, (cache, logits0), jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    )
+    return logits, cache

@@ -1,0 +1,6 @@
+"""Optimizer substrate (no optax): AdamW + schedules + clip + compression."""
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import cosine_with_warmup  # noqa: F401
+from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401
+from repro.optim.compress import compress_int8, decompress_int8  # noqa: F401

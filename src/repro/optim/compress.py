@@ -1,0 +1,43 @@
+"""int8 gradient compression with error feedback (DP all-reduce shrinker).
+
+The distributed-optimization trick for bandwidth-limited data-parallel
+axes (inter-pod DCN): quantize gradients to int8 with a per-tensor scale
+before the all-reduce, keep the quantization residual locally and add it
+back next step (error feedback), which preserves convergence to first
+order.  4x fewer bytes on the slowest link of the multi-pod mesh.
+
+The trainer enables this per-axis: intra-pod ICI all-reduces stay bf16,
+the pod-axis reduce uses int8 (see train/loop.py ``compress_pod_grads``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array, residual: jax.Array | None = None):
+    """-> (q int8, scale fp32, new_residual fp32)."""
+    g32 = g.astype(jnp.float32)
+    if residual is not None:
+        g32 = g32 + residual
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_residual = g32 - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads, residuals):
+    """Tree-wise int8+EF.  residuals may be None (first step)."""
+    if residuals is None:
+        residuals = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    out = jax.tree.map(compress_int8, grads, residuals)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    r = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, r

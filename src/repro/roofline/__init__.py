@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from repro.roofline.analyze import (  # noqa: F401
+    RooflineTerms,
+    analyze_compiled,
+    collective_bytes,
+)

@@ -1,0 +1,275 @@
+"""Roofline terms from compiled artifacts (the CPU-only perf methodology).
+
+Three terms per (arch x shape x mesh), in seconds-per-step on one chip:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
+  memory     = HLO_bytes_per_device / HBM_bw               (819e9 B/s)
+  collective = weighted collective bytes per device / ICI  (50e9 B/s/link)
+
+``compiled.cost_analysis()`` is evaluated on the GSPMD-*partitioned*
+module, so its flops/bytes are already per-device.  collective bytes are
+NOT in cost_analysis: we parse the partitioned HLO text and sum operand /
+output sizes of every collective op with ring-traffic weights:
+
+  all-reduce          2x operand bytes   (reduce-scatter + all-gather phases)
+  all-gather          1x output bytes    ((n-1)/n ~ 1 received)
+  reduce-scatter      1x operand bytes
+  all-to-all          1x operand bytes
+  collective-permute  1x operand bytes
+
+Async pairs (``-start``/``-done``) are counted once at the start op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.core import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_NAMES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_OP_RE = re.compile(
+    r"=\s+(?P<out>[^=]*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<variant>-start|-done)?"
+    r"\((?P<operands>[^)]*)\)"
+)
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[dims] occurrence in a shape/operand string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Weighted per-device collective bytes by op kind, from HLO text.
+
+    Operands in the partitioned dump are printed WITHOUT shapes (just
+    %names), so bytes are read from the output shape with per-op ring
+    weights: all-reduce 2x output (RS+AG phases), all-gather 1x output,
+    reduce-scatter group_size x output (~= input), all-to-all / permute
+    1x output.
+    """
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVE_NAMES}
+    for m in _OP_RE.finditer(hlo_text):
+        if m.group("variant") == "-done":
+            continue  # counted at -start
+        op = m.group("op")
+        line = m.string[m.start(): m.string.find("\n", m.start())]
+        ob = _shape_bytes(m.group("out"))
+        operand_b = _shape_bytes(m.group("operands"))
+        if op == "all-reduce":
+            b = 2.0 * (operand_b or ob)
+        elif op == "all-gather":
+            b = float(ob or operand_b)
+        elif op == "reduce-scatter":
+            if operand_b:
+                b = float(operand_b)
+            else:
+                g = _GROUPS_RE.search(line)
+                b = float(ob) * (int(g.group(2)) if g else 1)
+        else:  # all-to-all, collective-permute
+            b = float(operand_b or ob)
+        out[op] += b
+    return out
+
+
+# Ops that move HBM bytes on a fusing backend (TPU): everything elementwise
+# between them rides along for free (register/VMEM resident).  Operand
+# shapes are resolved from the instruction symbol table since the
+# partitioned dump prints operands without types.
+_HEAVY_OPS = (
+    "dot", "convolution", "reduce", "reduce-window", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "sort", "concatenate", "copy",
+    "transpose", "custom-call", "select-and-scatter", "pad",
+    "cholesky", "triangular-solve", "fft", "rng",
+)
+
+# XLA:CPU wraps many SINGLE elementwise ops in named micro-fusions
+# ("%multiply_add_fusion", "%bitcast_select_fusion"); counting every fusion
+# collapses this model back to the raw metric.  A fusion is heavy only when
+# its NAME says it wraps a data-moving op ("%wrapped_scatter", ...).
+_HEAVY_FUSION_HINTS = (
+    "scatter", "gather", "dot", "sort", "reduce", "conv", "transpose",
+    "concatenate", "dynamic",
+)
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*([a-z0-9]+\[[0-9,]*\][^\s]*|\([^)]*\))\s+([\w\-]+)\("
+)
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+def fused_bytes(hlo_text: str) -> float:
+    """Post-fusion HBM-traffic model: sum output + operand bytes of
+    non-fusable ('heavy') ops only.  Elementwise/convert/broadcast chains
+    between heavy ops are counted at the heavy ops' edges -- the same
+    accounting a fused TPU module would show.  Collectives are excluded
+    (they are the third roofline term)."""
+    shapes: dict[str, int] = {}
+    heavy: list[tuple[str, list[str]]] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_s, op = m.groups()
+        shapes[name] = _shape_bytes(shape_s)
+        is_heavy = op in _HEAVY_OPS or (
+            op == "fusion" and any(h in name for h in _HEAVY_FUSION_HINTS)
+        )
+        if is_heavy:
+            args = line[m.end():]
+            operands = _OPERAND_RE.findall(args.split(")", 1)[0])
+            heavy.append((name, operands))
+    total = 0.0
+    for name, operands in heavy:
+        total += shapes.get(name, 0)
+        for o in operands:
+            total += shapes.get(o, 0)
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float  # fused-model bytes (post-fusion HBM traffic)
+    coll_bytes_per_device: float
+    coll_breakdown: dict
+    model_flops: float  # 6ND (train) / 2ND (serve) useful FLOPs, global
+    raw_bytes_per_device: float = 0.0  # raw HLO 'bytes accessed' (upper bound)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / hw.TPU_V5E.peak_flops_bf16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / hw.TPU_V5E.hbm_bw
+
+    @property
+    def memory_raw_s(self) -> float:
+        return self.raw_bytes_per_device / hw.TPU_V5E.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / hw.TPU_V5E.ici_bw_per_link
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time: the dominant term (perfect overlap model)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: catches remat/redundancy waste."""
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilisation at the roofline step time."""
+        peak = hw.TPU_V5E.peak_flops_bf16 * self.n_devices
+        return self.model_flops / (self.step_s * peak) if self.step_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "raw_bytes_per_device": self.raw_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_raw_s": self.memory_raw_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s": self.step_s,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "mfu": self.mfu,
+        }
+
+
+def analyze_compiled(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    model_flops: float,
+) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byt = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        n_devices=n_devices,
+        flops_per_device=flops,
+        bytes_per_device=fused_bytes(text),
+        raw_bytes_per_device=byt,
+        coll_bytes_per_device=sum(coll.values()),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_for(cfg, shape, n_active_params: int) -> float:
+    """6ND for training, 2ND for serve steps (N = active params)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active_params * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active_params * shape.global_batch

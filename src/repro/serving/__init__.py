@@ -1,0 +1,3 @@
+"""Serving: batched prefill/decode engine."""
+
+from repro.serving.engine import ServeConfig, ServeEngine  # noqa: F401

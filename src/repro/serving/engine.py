@@ -1,0 +1,106 @@
+"""Batched serving engine: synchronized prefill -> decode.
+
+The engine owns the jitted prefill and decode step (cache donated between
+steps so decode is allocation-free), a greedy/temperature sampler, and the
+cache manager.  Decode is *synchronized batched*: all slots advance one
+token per step -- the serving mode the assigned ``decode_32k``/``long_500k``
+shape cells model (one new token against a seq_len-deep cache).  Continuous
+batching (per-slot positions) layers on top by rotating finished slots out
+between engine calls; the cache layout (absolute-position ``pos`` arrays)
+already supports it and `reset_slots` implements the rotation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int
+    batch: int
+    temperature: float = 0.0  # 0 => greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: Any, scfg: ServeConfig):
+        self.model = model
+        self.cfg = model.cfg
+        self.scfg = scfg
+        self.params = params
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=scfg.max_len)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, pos: model.decode_step(p, t, cache=c, pos=pos),
+            donate_argnums=(2,),
+        )
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self.cache = None
+        self.pos = 0
+
+    # -- sampling --------------------------------------------------------------
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        """logits: (B, 1[, ncb], V) -> tokens (B, 1[, ncb]) int32."""
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(
+            sub, logits / self.scfg.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    # -- serving ---------------------------------------------------------------
+
+    def prefill(self, batch: dict) -> jax.Array:
+        """Prime caches from a synchronized prompt batch; returns the first
+        sampled continuation token (prefill emits last-position logits)."""
+        logits, self.cache = self._prefill(self.params, batch)
+        self.pos = batch["tokens"].shape[1]
+        if self.cfg.frontend == "vit":
+            self.pos += self.cfg.n_patches
+        return self._sample(logits)
+
+    def decode(self, tokens: jax.Array, n_steps: int) -> jax.Array:
+        """Generate n_steps tokens.  tokens: (B, 1[, ncb]) seed tokens.
+        Returns (B, n_steps[, ncb])."""
+        if self.cache is None:
+            raise RuntimeError("prefill() first")
+        outs = []
+        tok = tokens
+        for _ in range(n_steps):
+            logits, self.cache = self._decode(
+                self.params, tok, self.cache, jnp.int32(self.pos)
+            )
+            tok = self._sample(logits)
+            outs.append(tok)
+            self.pos += 1
+        return jnp.concatenate(outs, axis=1)
+
+    def generate(self, batch: dict, n_steps: int) -> jax.Array:
+        first = self.prefill(batch)
+        rest = self.decode(first, n_steps - 1) if n_steps > 1 else None
+        return first if rest is None else jnp.concatenate([first, rest], axis=1)
+
+    def reset_slots(self, slot_mask: jax.Array) -> None:
+        """Clear finished slots (continuous-batching rotation): zero their
+        cache entries and positions so new prompts can prefill into them."""
+        if self.cache is None:
+            return
+
+        def clear(leaf):
+            if leaf.ndim >= 2 and leaf.shape[1] == self.scfg.batch:
+                shape = (1, self.scfg.batch) + (1,) * (leaf.ndim - 2)
+                m = slot_mask.reshape(shape).astype(leaf.dtype)
+                return leaf * (1 - m)
+            return leaf
+
+        self.cache = jax.tree.map(clear, self.cache)

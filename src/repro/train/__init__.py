@@ -1,0 +1,3 @@
+"""Training loop substrate."""
+
+from repro.train.loop import TrainConfig, Trainer, make_train_step  # noqa: F401

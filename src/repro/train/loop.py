@@ -1,0 +1,199 @@
+"""Training loop: jitted train_step + fault-tolerant Trainer.
+
+train_step composition (all inside one jit, donated params/opt):
+  microbatch gradient accumulation (lax.scan over the split batch)
+  -> global-norm clip -> AdamW -> metrics.
+Remat (jax.checkpoint around the layer scan body) is a config flag; the
+cosine schedule is a pure function of the step so resume needs no LR state.
+
+The Trainer is the fault-tolerance harness: restart-from-latest-complete
+checkpoint, async checkpoint writes off the critical path, stateless data
+resume (batch_at(step)), and a step-retry guard for transient failures
+(the single-process stand-in for the multi-pod restart path described in
+DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.models.registry import Model
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import cosine_with_warmup
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    clip_norm: float = 1.0
+    weight_decay: float = 0.1
+    microbatches: int = 1
+    remat: bool = False
+    ckpt_dir: str | None = None
+    ckpt_every: int = 100
+    max_step_retries: int = 2
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) -> (p, o, metrics).
+
+    Pure and shard-agnostic: the caller jits it with in/out shardings (or
+    plain jit on one device).  ``step`` drives the LR schedule.
+    """
+
+    def loss_of(p, b):
+        loss, metrics = model.loss_fn(p, b, remat=tcfg.remat)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch
+            )
+            return grads, metrics
+        micro = _split_microbatches(batch, tcfg.microbatches)
+
+        def acc_step(carry, mb):
+            g_acc, m_acc = carry
+            (_, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(
+                params, mb
+            )
+            g_acc = jax.tree.map(
+                lambda a, b_: a + b_.astype(jnp.float32), g_acc, g
+            )
+            m_acc = jax.tree.map(lambda a, b_: a + b_, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        m0 = {"ce": jnp.float32(0), "aux": jnp.float32(0), "loss": jnp.float32(0)}
+        (g, m), _ = jax.lax.scan(acc_step, (g0, m0), micro)
+        inv = 1.0 / tcfg.microbatches
+        return (
+            jax.tree.map(lambda x: x * inv, g),
+            jax.tree.map(lambda x: x * inv, m),
+        )
+
+    def train_step(params, opt_state, batch, step):
+        grads, metrics = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = cosine_with_warmup(
+            step,
+            peak_lr=tcfg.peak_lr,
+            warmup_steps=tcfg.warmup_steps,
+            total_steps=tcfg.total_steps,
+        )
+        new_params, new_opt = adamw_update(
+            grads,
+            opt_state,
+            params,
+            lr=lr,
+            weight_decay=tcfg.weight_decay,
+        )
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Single-controller training harness with restart semantics."""
+
+    def __init__(
+        self,
+        model: Model,
+        tcfg: TrainConfig,
+        params: Any,
+        *,
+        donate: bool = True,
+    ):
+        self.model = model
+        self.tcfg = tcfg
+        self.params = params
+        self.opt_state = adamw_init(params)
+        self.step = 0
+        step_fn = make_train_step(model, tcfg)
+        self._step_fn = jax.jit(
+            step_fn, donate_argnums=(0, 1) if donate else ()
+        )
+        self._ckpt = (
+            AsyncCheckpointer(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+        )
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def try_resume(self) -> bool:
+        """Restore the newest complete checkpoint if one exists."""
+        if not self.tcfg.ckpt_dir:
+            return False
+        step = latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return False
+        state = {"params": self.params, "opt": self.opt_state}
+        state, step = restore_checkpoint(self.tcfg.ckpt_dir, state, step=step)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = step
+        return True
+
+    def _checkpoint(self) -> None:
+        if self._ckpt is not None:
+            self._ckpt.save(
+                self.step, {"params": self.params, "opt": self.opt_state}
+            )
+
+    # -- the loop -------------------------------------------------------------
+
+    def run(self, batches: Iterable[dict], n_steps: int, log_every: int = 10):
+        """Run n_steps; transient step failures retry (straggler/worker
+        blips), persistent ones re-raise after checkpoint flush."""
+        it = iter(batches)
+        metrics = {}
+        t0 = time.perf_counter()
+        for _ in range(n_steps):
+            batch = next(it)
+            for attempt in range(self.tcfg.max_step_retries + 1):
+                try:
+                    self.params, self.opt_state, metrics = self._step_fn(
+                        self.params, self.opt_state, batch, self.step
+                    )
+                    break
+                except jax.errors.JaxRuntimeError:
+                    if attempt == self.tcfg.max_step_retries:
+                        if self._ckpt:
+                            self._ckpt.wait()
+                        raise
+            self.step += 1
+            if self.tcfg.ckpt_dir and self.step % self.tcfg.ckpt_every == 0:
+                self._checkpoint()
+            if log_every and self.step % log_every == 0:
+                dt = (time.perf_counter() - t0) / log_every
+                t0 = time.perf_counter()
+                loss = float(metrics["loss"])
+                print(
+                    f"step {self.step:6d}  loss {loss:8.4f}  "
+                    f"lr {float(metrics['lr']):.2e}  {dt*1e3:7.1f} ms/step"
+                )
+        if self._ckpt:
+            self._checkpoint()
+            self._ckpt.wait()
+        return metrics

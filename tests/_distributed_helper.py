@@ -1,0 +1,112 @@
+"""Subprocess body for tests/test_distributed.py (8 host devices)."""
+
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.data.synthetic import make_batch
+from repro.distributed import annotate, sharding
+from repro.models.registry import get_model
+from repro.optim import adamw_init
+from repro.train.loop import TrainConfig, make_train_step
+
+
+def _mesh():
+    return jax.make_mesh((4, 2), ("data", "model"))
+
+
+def train_equiv():
+    cfg = dataclasses.replace(get_smoke("glm4-9b"), dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    batch = make_batch(cfg, batch=8, seq=16, kind="train", seed=0)
+    step = make_train_step(model, TrainConfig())
+
+    ref_p, _, ref_m = jax.jit(step)(params, opt, batch, 0)
+
+    mesh = _mesh()
+    with mesh, annotate.annotations(mesh):
+        p_sh = sharding.param_shardings(params, mesh)
+        o_sh = type(opt)(
+            step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            mu=sharding.zero1_shardings(params, mesh),
+            nu=sharding.zero1_shardings(params, mesh),
+        )
+        b_sh = sharding.batch_shardings(batch, mesh)
+        params_d = jax.device_put(params, p_sh)
+        opt_d = jax.device_put(opt, o_sh)
+        batch_d = jax.device_put(batch, b_sh)
+        got_p, _, got_m = jax.jit(
+            step, in_shardings=(p_sh, o_sh, b_sh, None)
+        )(params_d, opt_d, batch_d, 0)
+
+    np.testing.assert_allclose(
+        float(ref_m["loss"]), float(got_m["loss"]), rtol=1e-5
+    )
+    for a, b in zip(jax.tree.leaves(ref_p), jax.tree.leaves(got_p)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4
+        )
+    print("PASS train_equiv")
+
+
+def decode_equiv():
+    cfg = dataclasses.replace(get_smoke("glm4-9b"), dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(8, 32, jnp.float32)
+    tok = jnp.zeros((8, 1), jnp.int32)
+
+    def step(p, c, t, pos):
+        return model.decode_step(p, t, cache=c, pos=pos)
+
+    ref_lg, _ = jax.jit(step)(params, cache, tok, jnp.int32(0))
+
+    mesh = _mesh()
+    with mesh, annotate.annotations(mesh):
+        p_sh = sharding.param_shardings(params, mesh)
+        c_sh = sharding.cache_shardings(cache, mesh)
+        got_lg, _ = jax.jit(step, in_shardings=(p_sh, c_sh, None, None))(
+            jax.device_put(params, p_sh), jax.device_put(cache, c_sh),
+            tok, jnp.int32(0),
+        )
+    np.testing.assert_allclose(
+        np.asarray(ref_lg), np.asarray(got_lg), rtol=2e-4, atol=2e-4
+    )
+    print("PASS decode_equiv")
+
+
+def moe_ep():
+    """MoE with grouped dispatch under EP sharding == single device."""
+    cfg = dataclasses.replace(get_smoke("qwen3-moe-30b-a3b"), dtype="float32")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=8, capacity_factor=4.0)
+    )
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, batch=8, seq=16, kind="train", seed=0)
+
+    def fwd(p, b):
+        return model.forward(p, b)[0]
+
+    ref = jax.jit(fwd)(params, batch)
+    mesh = _mesh()
+    with mesh, annotate.annotations(mesh):
+        p_sh = sharding.param_shardings(params, mesh)
+        b_sh = sharding.batch_shardings(batch, mesh)
+        got = jax.jit(fwd, in_shardings=(p_sh, b_sh))(
+            jax.device_put(params, p_sh), jax.device_put(batch, b_sh)
+        )
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=2e-4, atol=2e-4)
+    print("PASS moe_ep")
+
+
+if __name__ == "__main__":
+    {"train_equiv": train_equiv, "decode_equiv": decode_equiv, "moe_ep": moe_ep}[
+        sys.argv[1]
+    ]()

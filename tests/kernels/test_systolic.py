@@ -1,0 +1,72 @@
+"""Systolic matmul kernel vs the pure-jnp oracle (interpret=True on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.systolic import ops as K
+from repro.kernels.systolic.ref import matmul_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("m,n,k", [
+    (128, 128, 128),        # single block
+    (256, 384, 512),        # multi-block divisible
+    (8, 128, 128),          # minimum sublane
+    (100, 130, 70),         # non-divisible edges (padding path)
+    (33, 257, 129),         # awkward primes
+    (512, 128, 1024),       # deep contraction
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes_dtypes(m, n, k, dtype):
+    ka, kb = jax.random.split(jax.random.PRNGKey(m * n + k))
+    a = jax.random.normal(ka, (m, k), dtype)
+    b = jax.random.normal(kb, (k, n), dtype)
+    got = K.matmul(a, b, interpret=True)
+    want = matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "gelu", "silu"])
+def test_fused_bias_activation(activation):
+    ka, kb, kc = jax.random.split(jax.random.PRNGKey(7), 3)
+    a = jax.random.normal(ka, (64, 96), jnp.float32)
+    b = jax.random.normal(kb, (96, 160), jnp.float32)
+    bias = jax.random.normal(kc, (160,), jnp.float32)
+    got = K.matmul(a, b, bias, activation=activation, interpret=True)
+    want = matmul_ref(a, b, bias, activation=activation)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_explicit_block_plan():
+    from repro.core.blocking import BlockPlan
+
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 256), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
+    plan = BlockPlan(256, 256, 256, 128, 128, 128)
+    got = K.matmul(a, b, plan=plan, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b), rtol=1e-4, atol=1e-4)
+
+
+def test_out_dtype_override():
+    a = jnp.ones((16, 128), jnp.bfloat16)
+    b = jnp.ones((128, 128), jnp.bfloat16)
+    got = K.matmul(a, b, out_dtype=jnp.float32, interpret=True)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), 128.0)
+
+
+def test_shape_errors():
+    a = jnp.ones((4, 8))
+    with pytest.raises(ValueError):
+        K.matmul(a, jnp.ones((9, 4)))
+    with pytest.raises(ValueError):
+        K.matmul(jnp.ones((4,)), jnp.ones((4, 4)))

@@ -1,0 +1,74 @@
+"""Roofline analyzer: HLO collective parser + term arithmetic."""
+
+import pytest
+
+from repro.core import hw
+from repro.roofline.analyze import RooflineTerms, collective_bytes
+
+HLO = """
+HloModule jit_step
+%ar = f32[16,4096]{1,0} all-reduce(%a), channel_id=1, replica_groups=[16,16]<=[256]
+%ag = bf16[256,1024]{1,0} all-gather(%b), channel_id=2, dimensions={0}
+%rs = f32[4,128]{1,0} reduce-scatter(%c), channel_id=3, replica_groups=[8,4]<=[32], dimensions={0}
+%a2a = bf16[64,64]{1,0} all-to-all(%d), channel_id=4
+%cp = u32[128]{1,0} collective-permute(%e), channel_id=5
+%ag2 = f32[8]{1,0} all-gather-start(%f), channel_id=6
+%agd = f32[8]{1,0} all-gather-done(%ag2)
+"""
+
+
+def test_collective_parser_weights():
+    got = collective_bytes(HLO)
+    assert got["all-reduce"] == 2 * 16 * 4096 * 4        # 2x output bytes
+    assert got["all-gather"] == 256 * 1024 * 2 + 8 * 4   # output (+ start op)
+    assert got["reduce-scatter"] == 4 * 128 * 4 * 4      # output x group size
+    assert got["all-to-all"] == 64 * 64 * 2
+    assert got["collective-permute"] == 128 * 4
+    # -done is not double counted: only the -start's 32 bytes appear
+    assert got["all-gather"] != 256 * 1024 * 2 + 2 * 8 * 4
+
+
+def test_collective_parser_empty():
+    assert sum(collective_bytes("HloModule empty").values()) == 0
+
+
+def _terms(flops=1e12, byt=1e11, coll=1e9):
+    return RooflineTerms(
+        arch="x", shape="train_4k", mesh="16x16", n_devices=256,
+        flops_per_device=flops, bytes_per_device=byt,
+        coll_bytes_per_device=coll, coll_breakdown={},
+        model_flops=flops * 256 * 0.5,
+    )
+
+
+def test_terms_arithmetic():
+    t = _terms()
+    chip = hw.TPU_V5E
+    assert t.compute_s == pytest.approx(1e12 / chip.peak_flops_bf16)
+    assert t.memory_s == pytest.approx(1e11 / chip.hbm_bw)
+    assert t.collective_s == pytest.approx(1e9 / chip.ici_bw_per_link)
+    assert t.dominant == "memory"  # 0.122s vs 0.005s vs 0.02s
+    assert t.step_s == t.memory_s
+    assert t.useful_flop_ratio == pytest.approx(0.5)
+    # mfu = model_flops / (step_s * peak * n)
+    assert 0 < t.mfu < 1
+
+
+def test_dominant_switches():
+    assert _terms(flops=1e15, byt=1e9, coll=1e6).dominant == "compute"
+    assert _terms(flops=1e9, byt=1e9, coll=1e12).dominant == "collective"
+
+
+def test_model_flops_for():
+    from repro.configs import get_config
+    from repro.models.config import SHAPES, active_params
+    from repro.roofline.analyze import model_flops_for
+
+    cfg = get_config("glm4-9b")
+    n = active_params(cfg)
+    tr = model_flops_for(cfg, SHAPES["train_4k"], n)
+    pf = model_flops_for(cfg, SHAPES["prefill_32k"], n)
+    dec = model_flops_for(cfg, SHAPES["decode_32k"], n)
+    assert tr == 6.0 * n * 256 * 4096
+    assert pf == 2.0 * n * 32 * 32768
+    assert dec == 2.0 * n * 128
