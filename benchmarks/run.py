@@ -1,6 +1,14 @@
 """Benchmark entry point: one function per paper table.
 
-    PYTHONPATH=src python -m benchmarks.run [table1|table2|table6|roofline]
+    PYTHONPATH=src python -m benchmarks.run [table1|table2|table6|roofline|tune]
+
+  table1    DSE over block shapes: analytical fitter/roofline columns plus
+            the measured-time column (the f_max analogue) from repro.tune
+  table2    scaling
+  table6    baseline comparison
+  roofline  roofline report over the model zoo
+  tune      autotuner report: measured winner vs analytical best per GEMM
+            problem, served from the repro.tune plan cache when warm
 """
 
 from __future__ import annotations
@@ -10,13 +18,20 @@ import time
 
 
 def main() -> None:
-    from benchmarks import roofline_report, table1_dse, table2_scaling, table6_baseline
+    from benchmarks import (
+        roofline_report,
+        table1_dse,
+        table2_scaling,
+        table6_baseline,
+        tune_report,
+    )
 
     tables = {
         "table1": table1_dse.run,
         "table2": table2_scaling.run,
         "table6": table6_baseline.run,
         "roofline": roofline_report.run,
+        "tune": tune_report.run,
     }
     want = sys.argv[1:] or list(tables)
     for name in want:

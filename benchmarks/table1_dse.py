@@ -4,8 +4,11 @@ The paper synthesises (d_i0, d_j0, d_k0, d_p) candidates and reads f_max /
 fitter pass from Quartus; on TPU the clock is fixed and 'fitting' is the
 analytical VMEM check, so the DSE enumerates (bm, bn, bk), rejects shapes
 that exceed VMEM (the 'fitter failed' rows), and ranks survivors by their
-roofline terms.  Candidates are numerically validated through the Pallas
-kernel in interpret mode at a reduced problem size.
+roofline terms.  With ``repro.tune`` the table now carries *both* halves of
+the paper's loop: the analytical columns and a measured-time column (the
+f_max analogue) for feasible rows, timed at a reduced proxy problem so the
+sweep completes off-TPU too.  Candidates are numerically validated through
+the Pallas kernel in interpret mode at a reduced problem size.
 """
 
 from __future__ import annotations
@@ -17,10 +20,36 @@ import numpy as np
 from repro.core import dse
 from repro.core.analytical import paper_designs
 from repro.kernels.systolic import ops as K
+from repro.tune import measure as tune_measure
+
+# Feasible rows are measured at this reduced proxy size (blocks clamped to
+# it); distinct clamped geometries are timed once and shared.  This is the
+# same scale-model trick the paper itself uses when it reads f_max from a
+# single replicated PE column instead of a full-chip build.
+MEASURE_PROXY_DIM = 512
 
 
-def run(validate: bool = True) -> list[str]:
-    rows = ["table1_dse.block,vmem_kib,fits,ai_flop_per_byte,bound_by,peak_frac"]
+def _measure_feasible(recs: list[dse.DSERecord]) -> list[dse.DSERecord]:
+    memo: dict[tuple[int, int, int], float] = {}
+
+    def measure(r: dse.DSERecord) -> float:
+        d = MEASURE_PROXY_DIM
+        block = (min(r.bm, d), min(r.bn, d), min(r.bk, d))
+        if block not in memo:
+            ms = tune_measure.measure_matmul(
+                d, d, d, *block, dtype="bfloat16", repeats=2, warmup=1
+            )
+            memo[block] = ms.best_us
+        return memo[block]
+
+    return dse.attach_measurements(recs, measure)
+
+
+def run(validate: bool = True, measure: bool = True) -> list[str]:
+    rows = [
+        "table1_dse.block,vmem_kib,fits,ai_flop_per_byte,bound_by,peak_frac,"
+        f"measured_us(proxy@{MEASURE_PROXY_DIM})"
+    ]
     m = n = k = 8192
     recs = dse.explore(
         m, n, k,
@@ -28,14 +57,17 @@ def run(validate: bool = True) -> list[str]:
         bns=(128, 256, 512, 1024, 2048),
         bks=(256, 512, 1024, 2048),
     )
+    if measure:
+        recs = _measure_feasible(recs)
     best = dse.best(recs)
     for r in sorted(recs, key=lambda r: (not r.fits, max(r.compute_us, r.memory_us))):
         peak_frac = r.compute_us / max(r.compute_us, r.memory_us)
+        measured = f"{r.measured_us:.1f}" if r.measured_us is not None else ""
         rows.append(
             f"{r.ident},{r.vmem_kib:.0f},{int(r.fits)},"
-            f"{r.arithmetic_intensity:.1f},{r.bound_by},{peak_frac:.3f}"
+            f"{r.arithmetic_intensity:.1f},{r.bound_by},{peak_frac:.3f},{measured}"
         )
-    rows.append(f"best,{best.ident},,,,")
+    rows.append(f"best,{best.ident},,,,,")
 
     # paper Table I sanity: the analytical model reproduces T_peak
     for ident, d in sorted(paper_designs().items()):
@@ -54,5 +86,5 @@ def run(validate: bool = True) -> list[str]:
         np.testing.assert_allclose(
             np.asarray(got), np.asarray(a @ b), rtol=1e-4, atol=1e-4
         )
-        rows.append("validate,pallas-vs-dot,pass,,,")
+        rows.append("validate,pallas-vs-dot,pass,,,,")
     return rows

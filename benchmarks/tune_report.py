@@ -1,0 +1,42 @@
+"""Autotuner report: the closed DSE loop over representative GEMM problems.
+
+For each problem this runs ``repro.tune.autotune`` (serving from the plan
+cache when warm) and prints the measured winner next to the analytical
+best -- the at-a-glance answer to "does measuring beat the model?", which is
+the entire argument of the paper's Table I and of the autotuner subsystem.
+
+    PYTHONPATH=src python -m benchmarks.run tune
+"""
+
+from __future__ import annotations
+
+from repro.core import dse, hw
+from repro.tune import autotune
+
+# (M, N, K): a square GEMM, a skinny-activation FFN projection, and a
+# deep-contraction shape -- the three regimes the roofline terms separate.
+PROBLEMS = (
+    (512, 512, 512),
+    (256, 2048, 512),
+    (512, 512, 2048),
+)
+
+
+def run(top_k: int = 4, repeats: int = 2) -> list[str]:
+    chip = hw.get_chip(None)
+    rows = ["tune_report.problem,analytical_best,measured_winner,best_us,method,cache"]
+    for m, n, k in PROBLEMS:
+        analytical = dse.best(dse.explore(m, n, k, chip=chip))
+        result = autotune(
+            m, n, k, chip=chip, top_k=top_k, repeats=repeats, warmup=1
+        )
+        w = result.winner
+        rows.append(
+            f"{m}x{n}x{k},{analytical.ident},{w.bm}x{w.bn}x{w.bk},"
+            f"{w.best_us:.1f},{w.method},{'hit' if result.cache_hit else 'miss'}"
+        )
+    from repro.tune.cache import default_cache
+
+    cache = default_cache()
+    rows.append(f"cache_path,{cache.path},entries={len(cache)},,,")
+    return rows

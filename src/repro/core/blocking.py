@@ -57,12 +57,13 @@ class BlockPlan:
         out = self.bm * self.bn * self.in_dtype_bytes * mult
         return a_block + b_block + acc + out
 
-    def fits_vmem(self, chip: hw.TPUv5e = hw.TPU_V5E) -> bool:
-        return self.vmem_bytes() <= chip.vmem_budget_bytes
+    def fits_vmem(self, chip: hw.Chip | str | None = None) -> bool:
+        return self.vmem_bytes() <= hw.get_chip(chip).vmem_budget_bytes
 
-    def mxu_aligned(self, chip: hw.TPUv5e = hw.TPU_V5E) -> bool:
+    def mxu_aligned(self, chip: hw.Chip | str | None = None) -> bool:
         """All three dims hardware aligned (lane=128; sublane handled by
         Mosaic for the minor-most dim)."""
+        chip = hw.get_chip(chip)
         return (
             self.bm % chip.sublane_dim == 0
             and self.bn % chip.lane_dim == 0
@@ -102,18 +103,18 @@ class BlockPlan:
         """FLOP per HBM byte under this plan (to compare with ~240)."""
         return self.flops() / self.hbm_traffic_bytes()
 
-    def compute_bound(self, chip: hw.TPUv5e = hw.TPU_V5E) -> bool:
-        return self.arithmetic_intensity() >= chip.machine_balance_hbm
+    def compute_bound(self, chip: hw.Chip | str | None = None) -> bool:
+        return self.arithmetic_intensity() >= hw.get_chip(chip).machine_balance_hbm
 
     # -- roofline terms (seconds on one chip) --------------------------------
 
-    def compute_seconds(self, chip: hw.TPUv5e = hw.TPU_V5E) -> float:
-        return self.flops() / chip.peak_flops_bf16
+    def compute_seconds(self, chip: hw.Chip | str | None = None) -> float:
+        return self.flops() / hw.get_chip(chip).peak_flops_bf16
 
-    def memory_seconds(self, chip: hw.TPUv5e = hw.TPU_V5E) -> float:
-        return self.hbm_traffic_bytes() / chip.hbm_bw
+    def memory_seconds(self, chip: hw.Chip | str | None = None) -> float:
+        return self.hbm_traffic_bytes() / hw.get_chip(chip).hbm_bw
 
-    def bound_by(self, chip: hw.TPUv5e = hw.TPU_V5E) -> str:
+    def bound_by(self, chip: hw.Chip | str | None = None) -> str:
         return (
             "compute"
             if self.compute_seconds(chip) >= self.memory_seconds(chip)
@@ -125,13 +126,18 @@ def _round_to(x: int, quantum: int) -> int:
     return max(quantum, (x // quantum) * quantum)
 
 
+def round_up(x: int, q: int) -> int:
+    """Smallest multiple of q >= x (the padding quantum used everywhere)."""
+    return (x + q - 1) // q * q
+
+
 def derive_block_plan(
     m: int,
     n: int,
     k: int,
     *,
     in_dtype_bytes: int = 2,
-    chip: hw.TPUv5e = hw.TPU_V5E,
+    chip: hw.Chip | str | None = None,
     max_bm: int = 1024,
     max_bn: int = 1024,
     max_bk: int = 2048,
@@ -145,6 +151,7 @@ def derive_block_plan(
     *neither* operand but amortises accumulator traffic and lengthens the
     pipeline (their register chains, our MXU pipeline occupancy).
     """
+    chip = hw.get_chip(chip)
     quantum = chip.lane_dim
 
     # Start square and balanced: need harmonic-mean(bm,bn)/2 * 2/bytes >= CB
@@ -188,7 +195,7 @@ def tensor_parallel_balance(
     *,
     in_dtype_bytes: int = 2,
     links: int = 1,
-    chip: hw.TPUv5e = hw.TPU_V5E,
+    chip: hw.Chip | str | None = None,
 ) -> dict[str, float]:
     """Check eq.-(14)-style balance for a TP-sharded matmul.
 
@@ -198,6 +205,7 @@ def tensor_parallel_balance(
     means the collective hides under compute (balanced), the mesh-level
     analogue of 'no stalls'.
     """
+    chip = hw.get_chip(chip)
     per_chip_flops = 2 * m * n * k / tp
     ag_bytes = m * k * in_dtype_bytes * (tp - 1) / tp
     t_compute = per_chip_flops / chip.peak_flops_bf16

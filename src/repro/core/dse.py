@@ -30,10 +30,28 @@ class DSERecord:
     compute_us: float
     memory_us: float
     bound_by: str
+    # Problem geometry the record was derived for, so a record is
+    # self-contained (repro.tune measures straight from a record).
+    m: int = 0
+    n: int = 0
+    k: int = 0
+    in_dtype_bytes: int = 2
+    # The measured column: Table I's f_max analogue.  ``explore`` leaves it
+    # None (analytical half only); ``attach_measurements`` / repro.tune fill
+    # it in from real kernel timings.
+    measured_us: float | None = None
 
     @property
     def ident(self) -> str:
         return f"{self.bm}x{self.bn}x{self.bk}"
+
+    @property
+    def analytical_us(self) -> float:
+        """Roofline time bound: the analytical ranking key."""
+        return max(self.compute_us, self.memory_us)
+
+    def with_measurement(self, measured_us: float) -> "DSERecord":
+        return dataclasses.replace(self, measured_us=float(measured_us))
 
 
 def explore(
@@ -45,9 +63,10 @@ def explore(
     bns=(128, 256, 512, 1024),
     bks=(128, 256, 512, 1024, 2048),
     in_dtype_bytes: int = 2,
-    chip: hw.TPUv5e = hw.TPU_V5E,
+    chip: hw.Chip | str | None = None,
 ) -> list[DSERecord]:
     """Enumerate candidate block shapes for an (M, N, K) matmul."""
+    chip = hw.get_chip(chip)
     records = []
     for bm, bn, bk in itertools.product(bms, bns, bks):
         if m % bm or n % bn or k % bk:
@@ -66,17 +85,44 @@ def explore(
                 compute_us=plan.compute_seconds(chip) * 1e6,
                 memory_us=plan.memory_seconds(chip) * 1e6,
                 bound_by=plan.bound_by(chip),
+                m=m,
+                n=n,
+                k=k,
+                in_dtype_bytes=in_dtype_bytes,
             )
         )
     return records
 
 
+def attach_measurements(records, measure) -> list[DSERecord]:
+    """Fill the measured column for feasible records.
+
+    ``measure`` maps a DSERecord to a wall-clock time in microseconds (or
+    None to skip) -- typically ``repro.tune.measure`` behind a functools
+    partial.  Infeasible ('fitter failed') records pass through unmeasured,
+    exactly like Table I's blank f_max cells.
+    """
+    out = []
+    for r in records:
+        t = measure(r) if r.fits else None
+        out.append(r if t is None else r.with_measurement(t))
+    return out
+
+
 def best(records: list[DSERecord]) -> DSERecord:
-    """Rank feasible shapes: lowest max(compute, memory) time, then AI."""
+    """Rank feasible shapes; measured time wins over the analytical model.
+
+    Records carrying a ``measured_us`` (the f_max-analogue column) are
+    preferred as a group and ranked by measurement; purely analytical
+    records fall back to lowest max(compute, memory) time, then AI.
+    """
     feasible = [r for r in records if r.fits]
     if not feasible:
         raise ValueError("no feasible block shape (all 'fitter failed')")
+    measured = [r for r in feasible if r.measured_us is not None]
+    if measured:
+        return min(measured, key=lambda r: (r.measured_us, r.analytical_us))
     return min(
         feasible,
-        key=lambda r: (max(r.compute_us, r.memory_us), -r.arithmetic_intensity),
+        key=lambda r: (r.analytical_us, -r.arithmetic_intensity),
     )

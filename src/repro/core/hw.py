@@ -9,6 +9,7 @@ numbers are the grading constants given for this reproduction:
 from __future__ import annotations
 
 import dataclasses
+import os
 
 # ---------------------------------------------------------------------------
 # Paper hardware: Intel Stratix 10 GX2800 on a Bittware 520N.
@@ -56,6 +57,15 @@ STRATIX10 = Stratix10()
 
 @dataclasses.dataclass(frozen=True)
 class TPUv5e:
+    """A TPU-family chip description.
+
+    Despite the historical name (the class predates the chip registry), this
+    is the generic per-chip record: other registry entries are instances with
+    different constants.  ``name`` is the registry key and also what the
+    autotuner's cache entries are tagged with.
+    """
+
+    name: str = "tpu_v5e"
     peak_flops_bf16: float = 197e12  # FLOP/s per chip
     hbm_bw: float = 819e9  # bytes/s per chip
     ici_bw_per_link: float = 50e9  # bytes/s per link (grading constant)
@@ -79,7 +89,89 @@ class TPUv5e:
         return self.peak_flops_bf16 / (self.ici_bw_per_link * links)
 
 
+Chip = TPUv5e  # the generic alias new code should use
+
 TPU_V5E = TPUv5e()
+
+# A second registry entry so "tune for another target" is exercised for real:
+# TPU v4 per-chip numbers (275 TFLOP/s bf16, 1228 GB/s HBM, 32 MiB VMEM/core
+# -> a tighter fitter budget than v5e, so some v5e-feasible blocks fail here).
+TPU_V4 = TPUv5e(
+    name="tpu_v4",
+    peak_flops_bf16=275e12,
+    hbm_bw=1228e9,
+    ici_bw_per_link=50e9,
+    vmem_budget_bytes=24 * 1024 * 1024,
+)
+
+
+# ---------------------------------------------------------------------------
+# Chip registry: replaces the hardcoded TPU_V5E sprinkled through the kernel
+# wrappers.  ``get_chip(None)`` returns the process-wide default, which the
+# autotuner and tests can retarget without threading a chip argument through
+# every call site.
+# ---------------------------------------------------------------------------
+
+_CHIPS: dict[str, Chip] = {}
+# REPRO_CHIP retargets a whole process (e.g. serve tuned tpu_v4 plans on a
+# v4 host) without code changes; unknown names fall back to tpu_v5e at
+# first get_chip(), with a one-shot warning rather than an import error.
+_DEFAULT_CHIP_NAME = os.environ.get("REPRO_CHIP", TPU_V5E.name)
+_warned_default = False
+
+
+def register_chip(chip: Chip) -> Chip:
+    """Add (or replace) a chip in the registry; returns it for chaining."""
+    _CHIPS[chip.name] = chip
+    return chip
+
+
+register_chip(TPU_V5E)
+register_chip(TPU_V4)
+
+
+def chip_names() -> tuple[str, ...]:
+    return tuple(sorted(_CHIPS))
+
+
+def get_chip(name: str | Chip | None = None) -> Chip:
+    """Resolve a chip by registry name; ``None`` -> the current default.
+
+    Accepts an already-resolved Chip and passes it through, so call sites can
+    take ``chip: str | Chip | None`` without case analysis.
+    """
+    if name is None:
+        chip = _CHIPS.get(_DEFAULT_CHIP_NAME)
+        if chip is None:
+            global _warned_default
+            if not _warned_default:
+                _warned_default = True
+                import warnings
+
+                warnings.warn(
+                    f"REPRO_CHIP={_DEFAULT_CHIP_NAME!r} is not a registered "
+                    f"chip {chip_names()}; falling back to {TPU_V5E.name!r}"
+                )
+            chip = TPU_V5E
+        return chip
+    if isinstance(name, TPUv5e):
+        return name
+    try:
+        return _CHIPS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown chip {name!r}; registered: {chip_names()}"
+        ) from None
+
+
+def set_default_chip(name: str | Chip) -> Chip:
+    """Set the process-wide default target (registering it if needed)."""
+    global _DEFAULT_CHIP_NAME
+    chip = name if isinstance(name, TPUv5e) else get_chip(name)
+    register_chip(chip)
+    _DEFAULT_CHIP_NAME = chip.name
+    return chip
+
 
 DTYPE_BYTES = {
     "float32": 4,

@@ -95,17 +95,11 @@ def matmul(
 
         y2 = systolic_ops.matmul(x2, w, out_dtype=out_dtype)
     elif backend == "reference":
-        from repro.core.blocking import derive_block_plan
+        from repro.core.blocking import BlockPlan
         from repro.core.systolic import blocked_matmul
 
         m, n = x2.shape[0], w.shape[1]
-        # The reference requires divisible shapes; fall back to a single
-        # block when the problem is smaller than a quantum.
-        bm = _largest_divisor_block(m, 512)
-        bn = _largest_divisor_block(n, 512)
-        bk = _largest_divisor_block(k, 512)
-        from repro.core.blocking import BlockPlan
-
+        bm, bn, bk = _reference_blocks(m, n, k, x2.dtype)
         plan = BlockPlan(m, n, k, bm, bn, bk)
         y2 = blocked_matmul(x2, w, plan).astype(out_dtype)
     else:  # pragma: no cover
@@ -113,11 +107,43 @@ def matmul(
     return y2.reshape(*lead, w.shape[1])
 
 
+def _reference_blocks(m: int, n: int, k: int, dtype) -> tuple[int, int, int]:
+    """(bm, bn, bk) for the Definition-4 reference path.
+
+    Prefers a ``repro.tune`` cache entry for this problem when its geometry
+    divides the (unpadded) shapes -- the reference implementation cannot pad
+    -- and otherwise falls back to the largest-divisor heuristic.
+    """
+    try:
+        from repro.core import hw
+        from repro.tune import cache as tune_cache
+
+        hit = tune_cache.lookup_block(
+            "reference", hw.get_chip(None).name, m, n, k, str(dtype)
+        )
+    except ImportError:  # pragma: no cover
+        hit = None
+    if hit is not None and m % hit.bm == 0 and n % hit.bn == 0 and k % hit.bk == 0:
+        return hit.bm, hit.bn, hit.bk
+    return (
+        _largest_divisor_block(m, 512),
+        _largest_divisor_block(n, 512),
+        _largest_divisor_block(k, 512),
+    )
+
+
 def _largest_divisor_block(dim: int, cap: int) -> int:
-    """Largest power-of-two-ish block <= cap that divides dim."""
-    for cand in (1024, 512, 256, 128, 64, 32, 16, 8, 4, 2):
-        if cand <= cap and dim % cand == 0:
+    """Largest power-of-two block <= cap that divides dim (else dim itself).
+
+    Candidates start at the cap instead of a fixed 1024 so an over-cap value
+    is never even considered (the old list iterated 1024/512/... and
+    discarded anything above ``cap`` one by one).
+    """
+    cand = 1 << max(cap, 1).bit_length() - 1  # largest power of two <= cap
+    while cand >= 2:
+        if dim % cand == 0:
             return cand
+        cand >>= 1
     return dim
 
 

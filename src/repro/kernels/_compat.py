@@ -1,0 +1,26 @@
+"""Pallas API compatibility across JAX versions.
+
+Newer JAX exposes ``pltpu.CompilerParams`` with a ``GridDimensionSemantics``
+enum; 0.4.x calls it ``TPUCompilerParams`` and takes plain strings.  Kernels
+declare their grid semantics as lowercase strings ("parallel"/"arbitrary")
+and go through this shim so one source tree runs on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    """CompilerParams with the given per-grid-dim semantics, any JAX version."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        return pltpu.TPUCompilerParams(
+            dimension_semantics=tuple(dimension_semantics)
+        )
+    enum = getattr(pltpu, "GridDimensionSemantics", None)
+    if enum is not None:
+        sems = tuple(getattr(enum, s.upper()) for s in dimension_semantics)
+    else:  # pragma: no cover - future JAX that takes strings again
+        sems = tuple(dimension_semantics)
+    return cls(dimension_semantics=sems)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 _NEG_INF = -1e30
 _STAT_LANES = 128  # online-softmax stats replicated across one lane tile
 
@@ -126,13 +128,7 @@ def flash_attention_call(
     kv_spec = pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0))
     o_spec = pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0))
 
-    params = pltpu.CompilerParams(
-        dimension_semantics=(
-            pltpu.GridDimensionSemantics.PARALLEL,
-            pltpu.GridDimensionSemantics.PARALLEL,
-            pltpu.GridDimensionSemantics.ARBITRARY,
-        ),
-    )
+    params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
     cost = pl.CostEstimate(
         flops=4 * bh * sq * skv * d,
         bytes_accessed=(q.size + k.size + v.size + q.size) * q.dtype.itemsize,

@@ -8,14 +8,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.attention import kernel as _kernel
+from repro.core.blocking import round_up as _round_up
 
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
-
-
-def _round_up(x: int, q: int) -> int:
-    return (x + q - 1) // q * q
 
 
 @functools.partial(

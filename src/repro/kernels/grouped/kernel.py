@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 
 def _grouped_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
     k = pl.program_id(3)
@@ -58,14 +60,7 @@ def grouped_matmul_call(
     w_spec = pl.BlockSpec((1, bk, bn), lambda ee, i, j, kk: (ee, kk, j))
     o_spec = pl.BlockSpec((1, bc, bn), lambda ee, i, j, kk: (ee, i, j))
 
-    params = pltpu.CompilerParams(
-        dimension_semantics=(
-            pltpu.GridDimensionSemantics.PARALLEL,
-            pltpu.GridDimensionSemantics.PARALLEL,
-            pltpu.GridDimensionSemantics.PARALLEL,
-            pltpu.GridDimensionSemantics.ARBITRARY,
-        ),
-    )
+    params = tpu_compiler_params(("parallel", "parallel", "parallel", "arbitrary"))
     cost = pl.CostEstimate(
         flops=2 * e * c * k * n,
         bytes_accessed=x.size * x.dtype.itemsize * (n // bn)

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hw
+from repro.core.blocking import round_up as _round_up
 from repro.kernels.grouped import kernel as _kernel
 
 
@@ -15,8 +16,13 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _round_up(x: int, q: int) -> int:
-    return (x + q - 1) // q * q
+def _tuned_block(c: int, n: int, k: int, dtype, chip) -> tuple[int, int, int] | None:
+    """Tuned, problem-clamped (bc, bn, bk) for the per-expert problem."""
+    try:
+        from repro.tune import cache as tune_cache
+    except ImportError:  # pragma: no cover
+        return None
+    return tune_cache.tuned_block("pallas-grouped", chip, c, n, k, dtype)
 
 
 @functools.partial(
@@ -45,21 +51,27 @@ def grouped_matmul(
     bn: int | None = None,
     bk: int | None = None,
     interpret: bool | None = None,
+    chip: hw.Chip | str | None = None,
 ) -> jax.Array:
     """y[e] = x[e] @ w[e] for all experts e.
 
     x: (E, C, K) capacity-dispatched tokens; w: (E, K, N) expert weights.
-    Block defaults follow the balance-equation plan but cap at the
-    (padded) per-expert problem size.
+    Block priority per dim: explicit argument, then a ``repro.tune`` cache
+    entry for the per-expert (C, K) @ (K, N) problem, then the heuristic
+    default capped at the (padded) per-expert problem size.
     """
     if x.ndim != 3 or w.ndim != 3 or x.shape[0] != w.shape[0]:
         raise ValueError(f"bad grouped shapes {x.shape} @ {w.shape}")
     if x.shape[2] != w.shape[1]:
         raise ValueError(f"contraction mismatch {x.shape} @ {w.shape}")
-    chip = hw.TPU_V5E
+    chip = hw.get_chip(chip)
     e, c, k = x.shape
     n = w.shape[2]
     out_dtype = jnp.dtype(out_dtype or x.dtype)
+    if not (bc and bn and bk):  # fully explicit blocks skip the cache lookup
+        tuned = _tuned_block(c, n, k, x.dtype, chip)
+        if tuned is not None:
+            bc, bn, bk = bc or tuned[0], bn or tuned[1], bk or tuned[2]
     bc = bc or min(512, _round_up(c, chip.sublane_dim))
     bn = bn or min(512, _round_up(n, chip.lane_dim))
     bk = bk or min(1024, _round_up(k, chip.lane_dim))

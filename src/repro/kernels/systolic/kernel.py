@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
     "none": lambda x: x,
     "relu": jax.nn.relu,
@@ -113,13 +115,7 @@ def systolic_matmul_call(
         ),
         transcendentals=0,
     )
-    params = pltpu.CompilerParams(
-        dimension_semantics=(
-            pltpu.GridDimensionSemantics.PARALLEL,
-            pltpu.GridDimensionSemantics.PARALLEL,
-            pltpu.GridDimensionSemantics.ARBITRARY,
-        ),
-    )
+    params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
 
     if bias is None:
         kernel = functools.partial(_mmm_kernel, n_k=grid[2], activation=activation)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import hw
 from repro.core.blocking import BlockPlan, derive_block_plan
+from repro.core.blocking import round_up as _round_up
 from repro.kernels.systolic import kernel as _kernel
 
 
@@ -22,19 +23,42 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _round_up(x: int, q: int) -> int:
-    return (x + q - 1) // q * q
-
-
-def _clamp_plan(m: int, n: int, k: int, plan: BlockPlan | None) -> tuple[int, int, int]:
+def _clamp_plan(
+    m: int,
+    n: int,
+    k: int,
+    plan: BlockPlan | None,
+    chip: hw.Chip | str | None = None,
+) -> tuple[int, int, int]:
     """Choose (bm, bn, bk), shrinking to the (padded) problem if small."""
-    chip = hw.TPU_V5E
+    chip = hw.get_chip(chip)
     if plan is None:
-        plan = derive_block_plan(max(m, 8), max(n, 128), max(k, 128))
+        plan = derive_block_plan(
+            max(m, chip.sublane_dim),
+            max(n, chip.lane_dim),
+            max(k, chip.lane_dim),
+            chip=chip,
+        )
     bm = min(plan.bm, _round_up(m, chip.sublane_dim))
     bn = min(plan.bn, _round_up(n, chip.lane_dim))
     bk = min(plan.bk, _round_up(k, chip.lane_dim))
     return bm, bn, bk
+
+
+def _tuned_block(
+    m: int, n: int, k: int, dtype, activation: str, chip: hw.Chip
+) -> tuple[int, int, int] | None:
+    """Consult the repro.tune plan cache; clamp a hit to the padded problem.
+
+    Returns None on a miss (or if repro.tune is unavailable), in which case
+    the analytical ``_clamp_plan`` heuristic takes over -- the autotuner is
+    an accelerant, never a dependency.
+    """
+    try:
+        from repro.tune import cache as tune_cache
+    except ImportError:  # pragma: no cover
+        return None
+    return tune_cache.tuned_block("pallas-systolic", chip, m, n, k, dtype, activation)
 
 
 @functools.partial(
@@ -73,8 +97,14 @@ def matmul(
     activation: str = "none",
     plan: BlockPlan | None = None,
     interpret: bool | None = None,
+    chip: hw.Chip | str | None = None,
 ) -> jax.Array:
-    """(M, K) @ (K, N) [+bias] [activation] via the 3D-blocked Pallas kernel."""
+    """(M, K) @ (K, N) [+bias] [activation] via the 3D-blocked Pallas kernel.
+
+    Block-plan priority: an explicit ``plan`` argument wins; otherwise a
+    tuned plan from the ``repro.tune`` cache for this exact problem; finally
+    the analytical balance-equation heuristic.
+    """
     if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"expected 2D operands, got {a.shape} @ {b.shape}")
     if a.shape[1] != b.shape[0]:
@@ -83,7 +113,9 @@ def matmul(
     interpret = _auto_interpret() if interpret is None else interpret
     m, k = a.shape
     n = b.shape[1]
-    bm, bn, bk = _clamp_plan(m, n, k, plan)
+    chip = hw.get_chip(chip)
+    blocks = _tuned_block(m, n, k, a.dtype, activation, chip) if plan is None else None
+    bm, bn, bk = blocks if blocks is not None else _clamp_plan(m, n, k, plan, chip)
     return _matmul_jit(
         a,
         b,

@@ -29,10 +29,7 @@ from repro.core import ops
 from repro.distributed.annotate import constrain
 from repro.models import layers
 from repro.models.config import ArchConfig
-
-
-def _round_up(x: int, q: int) -> int:
-    return (x + q - 1) // q * q
+from repro.core.blocking import round_up as _round_up
 
 
 def init_moe(key, cfg: ArchConfig) -> dict:

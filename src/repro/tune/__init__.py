@@ -1,0 +1,44 @@
+"""repro.tune -- the empirical autotuner that closes the DSE loop.
+
+The paper's methodology is: enumerate geometries, reject the ones the fitter
+cannot place, *measure* the survivors, and ship the winner (Table I).  The
+analytical half of that loop lives in ``repro.core.dse``; this package adds
+the measurement half and the persistence that makes it pay off:
+
+  candidates  fitter-pruned, analytically ranked geometries
+  measure     wall-clock timing (TPU device / CPU interpret / XLA proxy)
+  cache       versioned JSON store keyed by (backend, chip, M, N, K, dtype,
+              activation), consulted by the kernel dispatchers
+  autotune    the loop: generate -> measure -> persist -> serve
+
+CLI: ``python -m repro.tune --m 512 --n 512 --k 512``.
+"""
+
+from repro.tune.autotune import TuneResult, autotune
+from repro.tune.cache import (
+    CacheKey,
+    PlanCache,
+    TunedPlan,
+    default_cache,
+    default_cache_path,
+    lookup_block,
+    reset_default_cache,
+)
+from repro.tune.candidates import Candidate, generate
+from repro.tune.measure import Measurement, measure_matmul
+
+__all__ = [
+    "autotune",
+    "TuneResult",
+    "CacheKey",
+    "PlanCache",
+    "TunedPlan",
+    "default_cache",
+    "default_cache_path",
+    "lookup_block",
+    "reset_default_cache",
+    "Candidate",
+    "generate",
+    "Measurement",
+    "measure_matmul",
+]

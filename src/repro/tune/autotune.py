@@ -1,0 +1,143 @@
+"""The closed DSE loop: generate -> fit -> measure -> persist -> serve.
+
+``autotune`` is the Table I pipeline end to end.  The analytical model plays
+the fitter (pruning), the measurement stage plays Quartus' f_max report, and
+the winner lands in the JSON plan cache that the kernel dispatchers consult
+on every ``matmul`` call.  A second invocation for the same problem is a pure
+cache hit -- no compilation, no timing.
+
+``measure_fn`` is injectable (record -> Measurement) so tests can close the
+loop deterministically without hardware or wall clocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core import dse, hw
+from repro.tune import candidates as cand_mod
+from repro.tune import measure as measure_mod
+from repro.tune.cache import CacheKey, PlanCache, TunedPlan, default_cache
+
+MeasureFn = Callable[[dse.DSERecord], measure_mod.Measurement]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    key: CacheKey
+    winner: TunedPlan
+    cache_hit: bool
+    # Measured records (empty on a cache hit), best-first.
+    records: tuple[dse.DSERecord, ...] = ()
+
+    @property
+    def block(self) -> tuple[int, int, int]:
+        return (self.winner.bm, self.winner.bn, self.winner.bk)
+
+
+def autotune(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    dtype: str = "bfloat16",
+    activation: str = "none",
+    backend: str = "pallas-systolic",
+    chip: hw.Chip | str | None = None,
+    top_k: int = 8,
+    repeats: int = 3,
+    warmup: int = 1,
+    method: str = "auto",
+    cache: PlanCache | None = None,
+    measure_fn: MeasureFn | None = None,
+    force: bool = False,
+) -> TuneResult:
+    """Tune one (M, N, K, dtype, activation) problem and persist the winner.
+
+    Deterministic given a deterministic ``measure_fn``: candidates come out
+    of ``dse.explore`` in a fixed order, ties in measured time break on the
+    analytical bound and then on the geometry itself.
+    """
+    import jax.numpy as jnp
+
+    chip = hw.get_chip(chip)
+    cache = cache or default_cache()
+    # Canonicalise the dtype ("float32", not "<class 'numpy.float32'>") so
+    # the fitter's byte model is right and the cache key matches the
+    # str(array.dtype) the kernel dispatchers look up with.
+    dtype = str(jnp.dtype(dtype))
+    if measure_fn is None and backend not in measure_mod.MEASURABLE_BACKENDS:
+        raise ValueError(
+            f"no built-in measurement for backend {backend!r}; supported: "
+            f"{measure_mod.MEASURABLE_BACKENDS} (or pass measure_fn=...)"
+        )
+    key = CacheKey(
+        backend=backend,
+        chip=chip.name,
+        m=int(m),
+        n=int(n),
+        k=int(k),
+        dtype=dtype,
+        activation=activation,
+    )
+
+    if not force:
+        hit = cache.lookup(key)
+        if hit is not None:
+            return TuneResult(key=key, winner=hit, cache_hit=True)
+
+    in_bytes = hw.DTYPE_BYTES.get(dtype, 2)
+    cands = cand_mod.generate(
+        m, n, k, in_dtype_bytes=in_bytes, chip=chip, top_k=top_k
+    )
+
+    if measure_fn is None:
+        def measure_fn(rec: dse.DSERecord) -> measure_mod.Measurement | None:
+            if backend == "reference" and (m % rec.bm or n % rec.bn or k % rec.bk):
+                return None  # reference impl cannot pad; skip this geometry
+            return measure_mod.measure_matmul(
+                m, n, k, rec.bm, rec.bn, rec.bk,
+                dtype=dtype, activation=activation, backend=backend,
+                method=method, repeats=repeats, warmup=warmup,
+            )
+
+    measured: list[tuple[dse.DSERecord, measure_mod.Measurement]] = []
+    for c in cands:
+        ms = measure_fn(c.record)
+        if ms is None:
+            continue
+        measured.append((c.record.with_measurement(ms.best_us), ms))
+    if not measured:
+        raise ValueError(
+            f"no measurable candidate for ({m},{n},{k}) on backend {backend!r}"
+        )
+
+    # Ties on measured time break on the analytical bound, then geometry, so
+    # a stubbed constant-time measurement still yields one fixed winner.
+    measured.sort(
+        key=lambda rm: (
+            rm[0].measured_us,
+            rm[0].analytical_us,
+            rm[0].bm,
+            rm[0].bn,
+            rm[0].bk,
+        )
+    )
+    best_rec, best_ms = measured[0]
+    winner = TunedPlan(
+        bm=best_rec.bm,
+        bn=best_rec.bn,
+        bk=best_rec.bk,
+        mean_us=best_ms.mean_us,
+        best_us=best_ms.best_us,
+        method=best_ms.method,
+        repeats=best_ms.repeats,
+    )
+    cache.store(key, winner)
+    return TuneResult(
+        key=key,
+        winner=winner,
+        cache_hit=False,
+        records=tuple(rec for rec, _ in measured),
+    )

@@ -1,0 +1,260 @@
+"""Versioned JSON persistence for tuned block plans.
+
+The paper's DSE ends in Table I: a static artefact mapping each synthesised
+geometry to its measured f_max.  Our analogue is a small on-disk cache mapping
+a *problem* (backend, chip, M, N, K, dtype, activation) to the block geometry
+that measured fastest, so the cost of running the measurement loop is paid
+once per problem shape and every later ``matmul`` call starts from the
+empirical winner instead of the analytical heuristic.
+
+Design constraints:
+
+  * lookups happen on the hot dispatch path of ``kernels/systolic/ops`` --
+    they must be cheap (in-memory dict after one lazy load) and must never
+    raise (a corrupt/unreadable cache degrades to "no entry");
+  * the file is human-readable JSON with an explicit schema version, so a
+    schema change invalidates old files instead of mis-reading them;
+  * the location is overridable via ``REPRO_TUNE_CACHE`` (tests point it at a
+    tmpdir; clusters point it at shared storage).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import tempfile
+import threading
+import warnings
+
+SCHEMA_VERSION = 1
+
+_ENV_VAR = "REPRO_TUNE_CACHE"
+
+
+def default_cache_path() -> pathlib.Path:
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return pathlib.Path(env)
+    xdg = os.environ.get("XDG_CACHE_HOME") or os.path.expanduser("~/.cache")
+    return pathlib.Path(xdg) / "repro-tune" / "plans.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    """Identity of one tuning problem.
+
+    ``backend`` distinguishes the kernel family the plan drives
+    ("pallas-systolic", "pallas-grouped", "reference"); ``chip`` is the
+    registry name the measurement targeted.  For the grouped kernel the
+    (m, n, k) triple holds the *per-expert* (c, n, k) problem.
+    """
+
+    backend: str
+    chip: str
+    m: int
+    n: int
+    k: int
+    dtype: str
+    activation: str = "none"
+
+    def encode(self) -> str:
+        return "|".join(
+            [
+                self.backend,
+                self.chip,
+                str(self.m),
+                str(self.n),
+                str(self.k),
+                self.dtype,
+                self.activation,
+            ]
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedPlan:
+    """A cache entry: the winning geometry plus its measurement provenance."""
+
+    bm: int
+    bn: int
+    bk: int
+    mean_us: float
+    best_us: float
+    method: str  # "device-wall" | "interpret-wall" | "xla-proxy" | "stub"
+    repeats: int = 1
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TunedPlan":
+        return cls(
+            bm=int(d["bm"]),
+            bn=int(d["bn"]),
+            bk=int(d["bk"]),
+            mean_us=float(d["mean_us"]),
+            best_us=float(d["best_us"]),
+            method=str(d["method"]),
+            repeats=int(d.get("repeats", 1)),
+        )
+
+
+class PlanCache:
+    """Thread-safe load/lookup/store over one JSON file."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = pathlib.Path(path) if path else default_cache_path()
+        self._entries: dict[str, TunedPlan] | None = None
+        self._lock = threading.Lock()
+
+    # -- persistence ---------------------------------------------------------
+
+    def _load_locked(self) -> dict[str, TunedPlan]:
+        if self._entries is not None:
+            return self._entries
+        self._entries = self._read_file()
+        return self._entries
+
+    def _read_file(self) -> dict[str, TunedPlan]:
+        entries: dict[str, TunedPlan] = {}
+        try:
+            raw = json.loads(self.path.read_text())
+            if isinstance(raw, dict) and raw.get("version") == SCHEMA_VERSION:
+                for key, val in raw.get("entries", {}).items():
+                    entries[key] = TunedPlan.from_json(val)
+        except (OSError, ValueError, KeyError, TypeError, AttributeError):
+            # Missing or corrupt cache is equivalent to an empty one; the
+            # tuner will simply re-measure and rewrite it.
+            entries = {}
+        return entries
+
+    def _save_locked(self) -> None:
+        assert self._entries is not None
+        # Merge-on-write: re-read the file so entries stored by concurrent
+        # processes since our lazy load survive (ours win on key collision).
+        # Two simultaneous writers can still race the final os.replace --
+        # last one wins for *colliding* keys only -- which is acceptable for
+        # a cache whose entries are re-derivable by re-measuring.
+        merged = self._read_file()
+        merged.update(self._entries)
+        self._entries = merged
+        payload = {
+            "version": SCHEMA_VERSION,
+            "entries": {k: v.to_json() for k, v in sorted(self._entries.items())},
+        }
+        # A failed save degrades to an in-memory-only cache: this process
+        # still serves the tuned plan, later processes re-measure.  Warn so
+        # the silent re-tuning cost is at least visible.
+        try:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            # Atomic replace so a concurrent reader never sees a torn file.
+            fd, tmp = tempfile.mkstemp(
+                dir=str(self.path.parent), prefix=self.path.name, suffix=".tmp"
+            )
+        except OSError as e:
+            warnings.warn(f"repro.tune: cannot persist plan cache to {self.path}: {e}")
+            return
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError as e:
+            warnings.warn(f"repro.tune: cannot persist plan cache to {self.path}: {e}")
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    # -- public API ----------------------------------------------------------
+
+    def lookup(self, key: CacheKey) -> TunedPlan | None:
+        with self._lock:
+            return self._load_locked().get(key.encode())
+
+    def store(self, key: CacheKey, plan: TunedPlan) -> None:
+        with self._lock:
+            self._load_locked()[key.encode()] = plan
+            self._save_locked()
+
+    def refresh(self) -> None:
+        """Drop the in-memory view; next lookup re-reads the file."""
+        with self._lock:
+            self._entries = None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._load_locked())
+
+    def items(self) -> list[tuple[str, TunedPlan]]:
+        with self._lock:
+            return sorted(self._load_locked().items())
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default cache, consulted by the kernel dispatchers.
+# ---------------------------------------------------------------------------
+
+_default: PlanCache | None = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> PlanCache:
+    """The singleton cache at ``default_cache_path()`` (env-overridable)."""
+    global _default
+    with _default_lock:
+        if _default is None or _default.path != default_cache_path():
+            _default = PlanCache()
+        return _default
+
+
+def reset_default_cache() -> None:
+    """Forget the singleton (tests flip REPRO_TUNE_CACHE between cases)."""
+    global _default
+    with _default_lock:
+        _default = None
+
+
+def lookup_block(
+    backend: str,
+    chip: str,
+    m: int,
+    n: int,
+    k: int,
+    dtype: str,
+    activation: str = "none",
+) -> TunedPlan | None:
+    """Hot-path helper: tuned plan for a problem, or None.  Never raises."""
+    try:
+        key = CacheKey(backend, chip, int(m), int(n), int(k), str(dtype), activation)
+        return default_cache().lookup(key)
+    except Exception:  # pragma: no cover - defensive: dispatch must not die
+        return None
+
+
+def tuned_block(
+    backend: str,
+    chip,
+    m: int,
+    n: int,
+    k: int,
+    dtype,
+    activation: str = "none",
+) -> tuple[int, int, int] | None:
+    """The one dispatch-side consultation point: clamped geometry or None.
+
+    ``chip`` is a resolved ``hw`` Chip (its sublane/lane dims drive the
+    clamp to the padded problem).  Shared by the systolic and grouped
+    wrappers so the key schema and clamp rule live in exactly one place.
+    """
+    hit = lookup_block(backend, chip.name, m, n, k, str(dtype), activation)
+    if hit is None:
+        return None
+    from repro.core.blocking import round_up
+
+    return (
+        min(hit.bm, round_up(m, chip.sublane_dim)),
+        min(hit.bn, round_up(n, chip.lane_dim)),
+        min(hit.bk, round_up(k, chip.lane_dim)),
+    )

@@ -1,0 +1,104 @@
+"""Candidate generation: the analytical half of the DSE loop.
+
+This mirrors the paper's flow exactly: enumerate geometries, run the "fitter"
+(for us the analytical VMEM/alignment check in ``core.dse.explore``), and
+hand only the survivors to the expensive measurement stage -- the paper pays
+hours of place-and-route per survivor, we pay a kernel compile + timing.
+
+The pruning stage additionally ranks survivors by their roofline bound and
+keeps the top-K, because measuring every feasible shape is wasteful when the
+model already tells us the tail is hopeless (De Fine Licht et al. make the
+same argument for pruning their HLS sweep).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import dse, hw
+
+# Default sweep axes: every power-of-two geometry the kernel wrappers would
+# ever pick, one notch beyond on each side so the tuner can beat the
+# heuristic rather than only confirm it.
+DEFAULT_BMS = (128, 256, 512, 1024)
+DEFAULT_BNS = (128, 256, 512, 1024)
+DEFAULT_BKS = (128, 256, 512, 1024, 2048)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One fitter-surviving geometry, ranked for measurement."""
+
+    record: dse.DSERecord
+    rank: int  # position in the analytical ranking (0 = analytical best)
+
+    @property
+    def block(self) -> tuple[int, int, int]:
+        return (self.record.bm, self.record.bn, self.record.bk)
+
+    @property
+    def ident(self) -> str:
+        return self.record.ident
+
+
+def generate(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    in_dtype_bytes: int = 2,
+    chip: hw.Chip | str | None = None,
+    bms=DEFAULT_BMS,
+    bns=DEFAULT_BNS,
+    bks=DEFAULT_BKS,
+    top_k: int | None = 8,
+) -> list[Candidate]:
+    """Fitter-pruned, analytically-ranked candidates for an (M, N, K) matmul.
+
+    Returns at most ``top_k`` candidates (None = all survivors), ordered by
+    the analytical roofline bound.  Axes that do not divide the problem are
+    dropped by ``dse.explore`` itself; if nothing divides (awkward primes),
+    we fall back to the single clamped heuristic block so the tuner always
+    has something to measure.
+    """
+    chip = hw.get_chip(chip)
+    records = dse.explore(
+        m, n, k, bms=bms, bns=bns, bks=bks,
+        in_dtype_bytes=in_dtype_bytes, chip=chip,
+    )
+    survivors = [r for r in records if r.fits]
+    if not survivors:
+        survivors = [_heuristic_record(m, n, k, in_dtype_bytes, chip)]
+    survivors.sort(key=lambda r: (r.analytical_us, -r.arithmetic_intensity))
+    if top_k is not None:
+        survivors = survivors[:top_k]
+    return [Candidate(record=r, rank=i) for i, r in enumerate(survivors)]
+
+
+def _heuristic_record(m, n, k, in_dtype_bytes, chip) -> dse.DSERecord:
+    """The clamped balance-equation plan as a degenerate candidate set.
+
+    Delegates to the systolic dispatcher's own clamp so the tuner's fallback
+    is, by construction, the exact geometry the kernel would run untuned.
+    """
+    from repro.core.blocking import BlockPlan
+    from repro.kernels.systolic.ops import _clamp_plan
+
+    bm, bn, bk = _clamp_plan(m, n, k, None, chip)
+    p = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+    return dse.DSERecord(
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        vmem_kib=p.vmem_bytes() / 1024,
+        fits=p.fits_vmem(chip),
+        arithmetic_intensity=p.arithmetic_intensity(),
+        compute_bound=p.compute_bound(chip),
+        compute_us=p.compute_seconds(chip) * 1e6,
+        memory_us=p.memory_seconds(chip) * 1e6,
+        bound_by=p.bound_by(chip),
+        m=m,
+        n=n,
+        k=k,
+        in_dtype_bytes=in_dtype_bytes,
+    )

@@ -1,0 +1,191 @@
+"""Empirical timing of one block geometry -- the f_max measurement analogue.
+
+The paper gets its measured column by synthesising each survivor and reading
+f_max from Quartus; we get ours by compiling ``systolic_matmul_call`` at the
+candidate geometry and timing it.  Three methods, so the loop runs everywhere:
+
+  device-wall     real hardware: jit + block_until_ready wall clock (TPU)
+  interpret-wall  CPU: wall clock of the Pallas kernel in interpret mode.
+                  Faithful to the kernel's schedule but slow -- only sane for
+                  small problems.
+  xla-proxy       CPU: time one (bm, bk) x (bk, bn) block dot under XLA and
+                  scale by the grid size.  Fast, block-shape-sensitive, and
+                  the right default for big problems on CPU.
+
+"auto" picks device-wall on TPU, and on CPU interpret-wall below
+``INTERPRET_FLOP_BUDGET`` flops, xla-proxy above.  The returned Measurement
+records which method produced the number, and that provenance is persisted
+into the cache so a device-measured entry is never confused with a proxy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+METHODS = ("auto", "device-wall", "interpret-wall", "xla-proxy")
+
+# 2 * 256^3 * 4: interpret mode beyond a ~256^3-ish fp32 problem takes long
+# enough that the proxy wins on tuner throughput.
+INTERPRET_FLOP_BUDGET = 2 * (256**3) * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    mean_us: float
+    best_us: float
+    repeats: int
+    method: str
+
+
+def resolve_method(method: str, flops: int) -> str:
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; valid: {METHODS}")
+    if method != "auto":
+        return method
+    if jax.default_backend() == "tpu":
+        return "device-wall"
+    return "interpret-wall" if flops <= INTERPRET_FLOP_BUDGET else "xla-proxy"
+
+
+def _time_callable(fn, *, warmup: int, repeats: int) -> tuple[float, float]:
+    """(best_us, mean_us) of fn(); fn must block until the result is ready."""
+    for _ in range(max(warmup, 1)):  # first call pays compilation
+        fn()
+    times = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return min(times), statistics.fmean(times)
+
+
+def _operands(m: int, n: int, k: int, dtype) -> tuple[jax.Array, jax.Array]:
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(ka, (m, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
+    return jax.block_until_ready(a), jax.block_until_ready(b)
+
+
+# Kernel families the default measurement loop can drive.  "pallas-grouped"
+# times the per-expert problem through the grouped wrapper at E=1;
+# "reference" times the pure-JAX Definition-4 implementation (and requires
+# the geometry to divide the problem, which dse.explore candidates do).
+MEASURABLE_BACKENDS = ("pallas-systolic", "pallas-grouped", "reference")
+
+
+def measure_matmul(
+    m: int,
+    n: int,
+    k: int,
+    bm: int,
+    bn: int,
+    bk: int,
+    *,
+    dtype="bfloat16",
+    activation: str = "none",
+    backend: str = "pallas-systolic",
+    method: str = "auto",
+    repeats: int = 3,
+    warmup: int = 1,
+) -> Measurement:
+    """Time one (bm, bn, bk) geometry through the given kernel family."""
+    if backend not in MEASURABLE_BACKENDS:
+        raise ValueError(
+            f"cannot measure backend {backend!r}; supported: "
+            f"{MEASURABLE_BACKENDS} (pass autotune(measure_fn=...) for others)"
+        )
+    if activation != "none" and backend != "pallas-systolic":
+        # Only the systolic kernel has a fused epilogue; caching a timing
+        # labelled with an activation the kernel never ran would be a lie.
+        raise ValueError(
+            f"backend {backend!r} has no fused activation; got {activation!r}"
+        )
+    dtype = jnp.dtype(dtype)
+    method = resolve_method(method, 2 * m * n * k)
+
+    if method == "xla-proxy":
+        return _measure_xla_proxy(
+            m, n, k, bm, bn, bk, dtype=dtype, repeats=repeats, warmup=warmup
+        )
+
+    from repro.core.blocking import BlockPlan
+
+    plan = BlockPlan(m, n, k, bm, bn, bk)
+    interpret = method == "interpret-wall"
+
+    if backend == "reference":
+        if m % bm or n % bn or k % bk:
+            raise ValueError(
+                f"reference backend needs dividing blocks; "
+                f"({m},{n},{k}) % ({bm},{bn},{bk}) != 0"
+            )
+        from repro.core.systolic import blocked_matmul
+
+        a, b = _operands(m, n, k, dtype)
+        fn = jax.jit(lambda x, y: blocked_matmul(x, y, plan))
+
+        def run():
+            return jax.block_until_ready(fn(a, b))
+
+        method = "reference-wall"
+    elif backend == "pallas-grouped":
+        from repro.kernels.grouped import ops as grouped_ops
+
+        a, b = _operands(m, n, k, dtype)
+        xe, we = a[None], b[None]  # E=1: per-expert problem timing
+
+        def run():
+            y = grouped_ops.grouped_matmul(
+                xe, we, bc=bm, bn=bn, bk=bk, interpret=interpret
+            )
+            return jax.block_until_ready(y)
+
+    else:
+        from repro.kernels.systolic import ops as systolic_ops
+
+        a, b = _operands(m, n, k, dtype)
+
+        def run():
+            y = systolic_ops.matmul(
+                a, b, activation=activation, plan=plan, interpret=interpret
+            )
+            return jax.block_until_ready(y)
+
+    best, mean = _time_callable(run, warmup=warmup, repeats=repeats)
+    return Measurement(mean_us=mean, best_us=best, repeats=repeats, method=method)
+
+
+def _measure_xla_proxy(m, n, k, bm, bn, bk, *, dtype, repeats, warmup) -> Measurement:
+    """Block-dot wall clock scaled by grid size.
+
+    The proxy keeps the *relative* ordering of block shapes (bigger blocks
+    amortise per-dispatch overhead; undersized ones pay it per grid step),
+    which is all the argmin over candidates needs on a host that cannot run
+    the real kernel.
+    """
+    eff_bm, eff_bn, eff_bk = min(bm, m), min(bn, n), min(bk, k)
+    steps = (
+        -(m // -eff_bm) * -(n // -eff_bn) * -(k // -eff_bk)
+    )  # ceil-div grid volume
+    a, b = _operands(eff_bm, eff_bn, eff_bk, dtype)
+    dot = jax.jit(
+        lambda x, y: jax.lax.dot_general(
+            x, y, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    )
+
+    def run():
+        return jax.block_until_ready(dot(a, b))
+
+    best, mean = _time_callable(run, warmup=warmup, repeats=repeats)
+    return Measurement(
+        mean_us=mean * steps,
+        best_us=best * steps,
+        repeats=repeats,
+        method="xla-proxy",
+    )

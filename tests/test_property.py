@@ -3,7 +3,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (dev extra); skipping property tests"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ops
 from repro.core.blocking import BlockPlan, derive_block_plan
