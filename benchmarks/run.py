@@ -1,6 +1,6 @@
 """Benchmark entry point: one function per paper table.
 
-    PYTHONPATH=src python -m benchmarks.run [table1|table2|table6|roofline|tune]
+    PYTHONPATH=src python -m benchmarks.run [table1|table2|table6|roofline|tune|serve]
 
   table1    DSE over block shapes: analytical fitter/roofline columns plus
             the measured-time column (the f_max analogue) from repro.tune
@@ -9,6 +9,9 @@
   roofline  roofline report over the model zoo
   tune      autotuner report: measured winner vs analytical best per GEMM
             problem, served from the repro.tune plan cache when warm
+  serve     continuous vs synchronized batching on one ragged Poisson trace:
+            tokens/s, p50/p99 step latency, mean slot occupancy (the serving
+            analogue of the paper's DSP-utilisation column); BENCH JSON lines
 """
 
 from __future__ import annotations
@@ -20,6 +23,7 @@ import time
 def main() -> None:
     from benchmarks import (
         roofline_report,
+        serve_throughput,
         table1_dse,
         table2_scaling,
         table6_baseline,
@@ -32,6 +36,7 @@ def main() -> None:
         "table6": table6_baseline.run,
         "roofline": roofline_report.run,
         "tune": tune_report.run,
+        "serve": serve_throughput.run,
     }
     want = sys.argv[1:] or list(tables)
     for name in want:

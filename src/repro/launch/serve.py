@@ -1,7 +1,16 @@
-"""Serving launcher: batched prefill + decode with the ServeEngine.
+"""Serving launcher: synchronized batched prefill+decode, or trace-driven
+continuous batching.
+
+Synchronized (fixed batch, all slots in lockstep)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
         --batch 4 --prompt-len 64 --gen 32
+
+Continuous batching (Poisson arrivals, ragged prompt/gen lengths; the
+scheduler keeps refilling freed slots so the matmul units stay busy)::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --continuous --requests 16 --slots 4 --rate 0.5
 """
 
 from __future__ import annotations
@@ -12,9 +21,104 @@ import time
 import jax
 
 from repro import configs
-from repro.data.synthetic import make_batch
+from repro.data.synthetic import make_batch, make_request_trace
 from repro.models.registry import get_model
-from repro.serving.engine import ServeConfig, ServeEngine
+from repro.serving import (
+    ContinuousScheduler,
+    ServeConfig,
+    ServeEngine,
+    requests_from_trace,
+)
+
+
+def _build_engine(model, params, args, max_len: int, batch: int) -> ServeEngine:
+    return ServeEngine(
+        model,
+        params,
+        ServeConfig(
+            max_len=max_len,
+            batch=batch,
+            temperature=args.temperature,
+            seed=args.seed,
+        ),
+    )
+
+
+def run_synchronized(model, params, args) -> None:
+    cfg = model.cfg
+    max_len = args.prompt_len + args.gen + (
+        cfg.n_patches if cfg.frontend == "vit" else 0
+    )
+    engine = _build_engine(model, params, args, max_len, args.batch)
+    prompts = make_batch(
+        cfg, batch=args.batch, seq=args.prompt_len, kind="prefill", seed=args.seed
+    )
+
+    t0 = time.perf_counter()
+    first = engine.prefill(prompts)
+    jax.block_until_ready(first)
+    t_pf = time.perf_counter() - t0
+    print(f"prefill {args.batch}x{args.prompt_len} in {t_pf*1e3:.1f} ms")
+
+    # The first decode step absorbs the compile; steady-state throughput is
+    # measured over the remaining gen-2 steps only (never past max_len).
+    pieces = [first]
+    if args.gen >= 2:
+        t0 = time.perf_counter()
+        warm = engine.decode(first, 1)
+        jax.block_until_ready(warm)
+        t_compile = time.perf_counter() - t0
+        pieces.append(warm)
+        print(f"decode compile+first step {t_compile*1e3:.1f} ms")
+    n_steady = args.gen - 2
+    if n_steady > 0:
+        t0 = time.perf_counter()
+        out = engine.decode(pieces[-1], n_steady)
+        jax.block_until_ready(out)
+        t_dec = time.perf_counter() - t0
+        pieces.append(out)
+        toks = args.batch * n_steady
+        print(
+            f"steady-state {toks/max(t_dec,1e-9):.1f} tok/s "
+            f"({t_dec/n_steady*1e3:.2f} ms/step over {n_steady} steps)"
+        )
+    print(engine.decode_plan_report())
+    sample = jax.numpy.concatenate(pieces, axis=1)
+    print("sample tokens:", sample[0, :16].tolist())
+
+
+def run_continuous(model, params, args) -> None:
+    cfg = model.cfg
+    trace = make_request_trace(
+        cfg,
+        n_requests=args.requests,
+        mean_prompt=args.mean_prompt,
+        mean_gen=args.mean_gen,
+        rate=args.rate,
+        seed=args.seed,
+        max_prompt=args.prompt_len,
+        max_gen=args.gen,
+    )
+    prefix = cfg.n_patches if cfg.frontend == "vit" else 0
+    max_len = (
+        max(t["prompt"]["tokens"].shape[1] + t["max_new_tokens"] for t in trace)
+        + prefix
+    )
+    engine = _build_engine(model, params, args, max_len, args.slots)
+    sched = ContinuousScheduler(engine, policy=args.policy)
+    results = sched.run(requests_from_trace(trace))
+
+    s = sched.stats.summary()
+    print(
+        f"continuous[{args.policy}] {args.requests} requests over "
+        f"{s['ticks']} ticks ({s['idle_ticks']} idle) | "
+        f"{s['tokens_out']} tokens, {s['tok_per_s']:.1f} tok/s | "
+        f"step latency p50 {s['p50_step_ms']:.2f} ms / p99 {s['p99_step_ms']:.2f} ms | "
+        f"mean slot occupancy {s['mean_occupancy']:.2%}"
+    )
+    print(engine.decode_plan_report())
+    rid0 = min(results)
+    print(f"sample tokens (request {rid0}):", results[rid0][:16].tolist())
 
 
 def main() -> None:
@@ -26,6 +130,23 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    # continuous-batching mode
+    ap.add_argument(
+        "--continuous",
+        action="store_true",
+        help="trace-driven continuous batching (Poisson arrivals, ragged lengths)",
+    )
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=0.5, help="arrivals per decode step")
+    ap.add_argument("--mean-prompt", type=int, default=24)
+    ap.add_argument("--mean-gen", type=int, default=12)
+    ap.add_argument(
+        "--policy",
+        choices=ContinuousScheduler.POLICIES,
+        default="continuous",
+        help="'gang' reproduces synchronized batching for comparison",
+    )
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -33,40 +154,10 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
 
-    max_len = args.prompt_len + args.gen + (
-        cfg.n_patches if cfg.frontend == "vit" else 0
-    )
-    engine = ServeEngine(
-        model,
-        params,
-        ServeConfig(
-            max_len=max_len,
-            batch=args.batch,
-            temperature=args.temperature,
-            seed=args.seed,
-        ),
-    )
-    prompts = make_batch(
-        cfg, batch=args.batch, seq=args.prompt_len, kind="prefill", seed=args.seed
-    )
-
-    t0 = time.perf_counter()
-    first = engine.prefill(prompts)
-    jax.block_until_ready(first)
-    t_pf = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    out = engine.decode(first, args.gen - 1)
-    jax.block_until_ready(out)
-    t_dec = time.perf_counter() - t0
-
-    toks = args.batch * (args.gen - 1)
-    print(
-        f"prefill {args.batch}x{args.prompt_len} in {t_pf*1e3:.1f} ms | "
-        f"decode {toks} tokens in {t_dec*1e3:.1f} ms "
-        f"({toks/max(t_dec,1e-9):.1f} tok/s incl. compile)"
-    )
-    print("sample tokens:", out[0, :16].tolist())
+    if args.continuous:
+        run_continuous(model, params, args)
+    else:
+        run_synchronized(model, params, args)
 
 
 if __name__ == "__main__":

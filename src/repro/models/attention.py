@@ -1,9 +1,18 @@
 """Attention variants: GQA (full / sliding-window) and MLA, train + decode.
 
-Caches are plain dict pytrees.  Every cache stores an absolute-position array
-``pos`` (S_cache,) so full caches and SWA ring buffers share one masking rule:
+Caches are plain dict pytrees.  Every cache stores a per-slot absolute-position
+array ``pos`` (B, S_cache) so full caches and SWA ring buffers share one
+masking rule:
 
-    valid(k) = pos[k] >= 0  and  pos[k] <= q_pos  and  pos[k] > q_pos - window
+    valid(b, k) = pos[b, k] >= 0  and  pos[b, k] <= q_pos[b]
+                  and  pos[b, k] > q_pos[b] - window
+
+The batch axis is a pool of *slots* (continuous batching): decode accepts the
+query position as a scalar (synchronized batch, every slot at one depth) or as
+a ``(B,)`` vector (slots at different depths advance in one step).  A slot
+whose position is negative is empty -- its cache row stays marked ``pos = -1``
+everywhere, so the masking rule blanks every key and a freed slot can never
+attend to a previous request's state.
 
 MLA decode uses the *absorbed* formulation (scores computed in the latent
 space, W_uk/W_uv folded into the query/output paths) -- the production decode
@@ -491,19 +500,20 @@ def init_gqa_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
     return {
         "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
         "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
-        "pos": jnp.full((size,), -1, jnp.int32),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
     }
 
 
 def gqa_prime_cache(cache: dict, k: jax.Array, v: jax.Array, s: int) -> dict:
-    """Fill a cache from prefill keys/values (keep the trailing window)."""
-    size = cache["k"].shape[1]
+    """Fill a cache from prefill keys/values (keep the trailing window).
+    Synchronized: every batch row is primed at the same prompt length s."""
+    b, size = cache["k"].shape[0], cache["k"].shape[1]
     take = min(size, s)
     kk = k[:, s - take : s]
     vv = v[:, s - take : s]
     slots = jnp.arange(size)
     if size >= s:
-        pos = jnp.where(slots < take, slots, -1)
+        pos = jnp.broadcast_to(jnp.where(slots < take, slots, -1), (b, size))
         cache = dict(cache)
         cache["k"] = jax.lax.dynamic_update_slice(
             cache["k"], kk, (0, 0, 0, 0)
@@ -520,14 +530,34 @@ def gqa_prime_cache(cache: dict, k: jax.Array, v: jax.Array, s: int) -> dict:
     cache = dict(cache)
     cache["k"] = cache["k"].at[:, slot_of].set(kk)
     cache["v"] = cache["v"].at[:, slot_of].set(vv)
-    cache["pos"] = cache["pos"].at[slot_of].set(abs_pos)
+    cache["pos"] = cache["pos"].at[:, slot_of].set(abs_pos[None])
     return cache
+
+
+def _slot_update(
+    cache_leaf: jax.Array, new: jax.Array, start: jax.Array, active: jax.Array
+):
+    """Per-slot cache write: leaf (B, T, ...), new (B, 1, ...), start (B,),
+    active (B,) bool.  Inactive rows write back the entry already stored at
+    ``start`` (a one-token gather), so an empty slot's step is a true no-op
+    on its cache row."""
+
+    def upd(c, u, s_, a):
+        idx = (s_,) + (0,) * (c.ndim - 1)
+        old = jax.lax.dynamic_slice(c, idx, u.shape)
+        return jax.lax.dynamic_update_slice(c, jnp.where(a, u, old), idx)
+
+    return jax.vmap(upd)(cache_leaf, new, start, active)
 
 
 def gqa_decode(
     params: dict, x: jax.Array, cfg: ArchConfig, cache: dict, pos: jax.Array
 ):
-    """One-token decode.  x: (B, 1, d), pos: scalar int32 absolute position."""
+    """One-token decode.  x: (B, 1, d); pos: scalar int32 absolute position
+    (synchronized batch) or (B,) int32 per-slot positions (continuous
+    batching).  Slots with ``pos < 0`` are empty: their cache row is left
+    bit-for-bit untouched and their mask blanks every key, so the row
+    computes a throwaway output without ever touching valid state."""
     b, _, d = x.shape
     hd = cfg.resolved_head_dim
     q = ops.matmul(x, params["wq"].astype(x.dtype)).reshape(b, 1, cfg.n_heads, hd)
@@ -536,21 +566,23 @@ def gqa_decode(
     if cfg.qk_norm:
         q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
         k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
-    posv = pos[None] if pos.ndim == 0 else pos
-    q = layers.apply_rope(q, posv, cfg.rope_theta)
-    k = layers.apply_rope(k, posv, cfg.rope_theta)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posq = pos[:, None]  # (B, 1) per-slot rope positions
+    q = layers.apply_rope(q, posq, cfg.rope_theta)
+    k = layers.apply_rope(k, posq, cfg.rope_theta)
 
     size = cache["k"].shape[1]
-    slot = pos % size
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+    active = pos >= 0
+    slot = jnp.maximum(pos, 0) % size
+    ck = _slot_update(cache["k"], k, slot, active)
+    cv = _slot_update(cache["v"], v, slot, active)
+    cpos = _slot_update(cache["pos"], pos[:, None], slot, active)
 
     window = cfg.window if cfg.attention == "swa" else None
-    valid = (cpos >= 0) & (cpos <= pos)
+    valid = (cpos >= 0) & (cpos <= pos[:, None])
     if window is not None:
-        valid &= cpos > pos - window
-    scores_mask = valid[None, :]  # (1, T) applies to the single query row
+        valid &= cpos > (pos - window)[:, None]
+    scores_mask = valid  # (B, T) applies to each slot's single query row
 
     qg = q.reshape(b, 1, cfg.n_kv_heads, cfg.q_per_kv, hd)
     scores = jnp.einsum(
@@ -558,7 +590,7 @@ def gqa_decode(
     ) * (hd**-0.5)
     # decode scores (B, g, q, 1, T): q-head dim first, else split-K over T
     scores = constrain_pref(scores, 0, (2, 4))
-    scores = jnp.where(scores_mask[None, None, None], scores, -1e30)
+    scores = jnp.where(scores_mask[:, None, None, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bgqst,btgd->bsgqd", w.astype(cv.dtype), cv)
     o = o.reshape(b, 1, cfg.n_heads * hd)
@@ -653,7 +685,7 @@ def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
     return {
         "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
-        "pos": jnp.full((max_len,), -1, jnp.int32),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
     }
 
 
@@ -663,25 +695,29 @@ def mla_prime_cache(cache: dict, c_kv: jax.Array, k_rope: jax.Array, s: int) -> 
     cache["k_rope"] = jax.lax.dynamic_update_slice(
         cache["k_rope"], k_rope, (0, 0, 0)
     )
-    size = cache["pos"].shape[0]
+    b, size = cache["pos"].shape
     slots = jnp.arange(size)
-    cache["pos"] = jnp.where(slots < s, slots, -1)
+    cache["pos"] = jnp.broadcast_to(jnp.where(slots < s, slots, -1), (b, size))
     return cache
 
 
 def mla_decode(
     params: dict, x: jax.Array, cfg: ArchConfig, cache: dict, pos: jax.Array
 ):
-    """Absorbed-matrix decode: attention runs in the latent space."""
+    """Absorbed-matrix decode: attention runs in the latent space.  pos is a
+    scalar (synchronized batch) or (B,) per-slot position vector; negative
+    entries mark empty slots (cache row untouched, all keys blanked)."""
     m = cfg.mla
     b, _, _ = x.shape
     h = cfg.n_heads
-    posv = pos[None] if pos.ndim == 0 else pos
-    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, x, cfg, posv)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, x, cfg, pos[:, None])
 
-    ck = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, pos, 0))
-    cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
-    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (pos,))
+    active = pos >= 0
+    slot = jnp.maximum(pos, 0)  # full cache: absolute position is the slot
+    ck = _slot_update(cache["c_kv"], c_kv_new, slot, active)
+    cr = _slot_update(cache["k_rope"], k_rope_new, slot, active)
+    cpos = _slot_update(cache["pos"], pos[:, None], slot, active)
 
     # Absorb W_uk into the query:  q_eff[h] = q_nope[h] @ W_uk[h]^T
     wkv_b = params["wkv_b"].astype(x.dtype).reshape(
@@ -698,8 +734,8 @@ def mla_decode(
     )
     scores = (s_lat + s_rope) * scale
     scores = constrain_pref(scores, 0, (1, 3))  # heads else split-K over T
-    valid = (cpos >= 0) & (cpos <= pos)
-    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    valid = (cpos >= 0) & (cpos <= pos[:, None])  # (B, T)
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhst,btl->bshl", w.astype(ck.dtype), ck)  # latent ctx
     o = jnp.einsum("bshl,lhd->bshd", ctx, w_uv).reshape(b, 1, -1)

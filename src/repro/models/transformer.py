@@ -427,7 +427,12 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
 
 
 def decode_step(params, tokens: jax.Array, cfg: ArchConfig, cache: dict, pos):
-    """tokens: (B, 1[, ncb]) int32; pos: scalar int32 absolute position.
+    """tokens: (B, 1[, ncb]) int32; pos: absolute position -- a scalar int32
+    (synchronized batch: every slot at the same depth) or a (B,) int32
+    per-slot vector (continuous batching: slots at different depths advance
+    in one step; entries < 0 mark empty slots whose output is garbage and
+    whose cache rows stay masked).  SSM/hybrid state updates are position-
+    independent, so the vector form is meaningful for attention caches.
     -> (logits fp32 (B, 1[, ncb], V), new cache)."""
     dt = _cdtype(cfg)
     pos = jnp.asarray(pos, jnp.int32)

@@ -1,3 +1,16 @@
-"""Serving: batched prefill/decode engine."""
+"""Serving: batched prefill/decode engine, slot-pooled KV cache, and the
+continuous-batching request scheduler."""
 
-from repro.serving.engine import ServeConfig, ServeEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ServeConfig,
+    ServeEngine,
+    consult_decode_plans,
+    decode_gemm_problems,
+)
+from repro.serving.kvpool import KVPool  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    ContinuousScheduler,
+    Request,
+    SchedulerStats,
+    requests_from_trace,
+)

@@ -1,33 +1,112 @@
-"""Batched serving engine: synchronized prefill -> decode.
+"""Batched serving engine: synchronized prefill -> decode, plus the per-slot
+primitives the continuous-batching scheduler drives.
 
 The engine owns the jitted prefill and decode step (cache donated between
-steps so decode is allocation-free), a greedy/temperature sampler, and the
-cache manager.  Decode is *synchronized batched*: all slots advance one
-token per step -- the serving mode the assigned ``decode_32k``/``long_500k``
-shape cells model (one new token against a seq_len-deep cache).  Continuous
-batching (per-slot positions) layers on top by rotating finished slots out
-between engine calls; the cache layout (absolute-position ``pos`` arrays)
-already supports it and `reset_slots` implements the rotation.
+steps so decode is allocation-free) and a greedy/temperature sampler.  Two
+serving modes share those compiled functions:
+
+  * **synchronized batched decode** (``generate``): every slot advances one
+    token per step at a common depth -- the mode the ``decode_32k`` /
+    ``long_500k`` shape cells model;
+  * **continuous batching** (``repro.serving.scheduler`` +
+    ``repro.serving.kvpool``): the decode step takes a per-slot position
+    *vector*, so slots sitting at different depths advance in one step.  The
+    engine contributes ``prefill_request`` (batch-1 prefill that does NOT
+    touch the resident synchronized cache) and ``decode_slots`` (vector-pos
+    decode over an externally owned cache pytree); request lifecycle and KV
+    row management live in the scheduler/pool.
+
+Empty or cleared slots are marked ``pos = -1`` everywhere; the attention
+masking rule ``valid(k) = pos[k] >= 0`` then blanks their cache rows, so a
+freed slot can never attend to a previous request's keys.
+
+Decode-shape plans: the per-step dense GEMMs of a decode token are all
+``(batch, *) x (*, *)`` problems, so the batch geometry the scheduler picks
+determines which kernel plans fire.  ``decode_plans`` consults the
+``repro.tune`` plan cache (PR 1) for every such problem, letting launchers
+and benchmarks report whether the serving batch runs on measured winners or
+on the analytical fallback.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.registry import Model
+from repro.serving.kvpool import clear_slots
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_len: int
-    batch: int
+    batch: int  # synchronized batch size == continuous-batching slot count
     temperature: float = 0.0  # 0 => greedy
     seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Decode-shape plan consultation (the repro.tune cache, PR 1)
+# ---------------------------------------------------------------------------
+
+
+def decode_gemm_problems(cfg, batch: int) -> list[tuple[str, int, int, int]]:
+    """The per-token dense GEMM problems of one decode step: (name, M, N, K).
+
+    M is the serving batch (slot count) -- the knob the scheduler owns; N/K
+    come from the architecture.  MoE expert GEMMs route through the grouped
+    kernel and are tuned under its own backend key, so only the dense
+    projections are listed here.
+    """
+    d = cfg.d_model
+    probs: list[tuple[str, int, int, int]] = []
+    if cfg.attention == "mla":
+        m = cfg.mla
+        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+        probs += [
+            ("wq_a", batch, m.q_lora_rank, d),
+            ("wq_b", batch, cfg.n_heads * qk_head, m.q_lora_rank),
+            ("wkv_a", batch, m.kv_lora_rank + m.qk_rope_head_dim, d),
+            ("wo", batch, d, cfg.n_heads * m.v_head_dim),
+        ]
+    elif cfg.attention in ("gqa", "swa"):
+        hd = cfg.resolved_head_dim
+        probs += [
+            ("wq", batch, cfg.n_heads * hd, d),
+            ("wk", batch, cfg.n_kv_heads * hd, d),
+            ("wv", batch, cfg.n_kv_heads * hd, d),
+            ("wo", batch, d, cfg.n_heads * hd),
+        ]
+    if cfg.moe is None and cfg.d_ff:
+        probs += [
+            ("ffn_in", batch, cfg.d_ff, d),
+            ("ffn_out", batch, d, cfg.d_ff),
+        ]
+    return probs
+
+
+def consult_decode_plans(cfg, batch: int, chip=None) -> dict:
+    """Look every decode-step GEMM up in the repro.tune plan cache.
+
+    Returns ``{name: ((m, n, k), TunedPlan | None)}`` -- None means the
+    analytical heuristic will drive that projection.  Never raises: the
+    autotuner is an accelerant, not a dependency.
+    """
+    try:
+        from repro.core import hw
+        from repro.tune import cache as tune_cache
+    except ImportError:  # pragma: no cover
+        return {}
+    chip = hw.get_chip(chip)
+    dtype = str(jnp.dtype(cfg.dtype))
+    out = {}
+    for name, m, n, k in decode_gemm_problems(cfg, batch):
+        plan = tune_cache.lookup_block("pallas-systolic", chip.name, m, n, k, dtype)
+        out[name] = ((m, n, k), plan)
+    return out
 
 
 class ServeEngine:
@@ -46,6 +125,7 @@ class ServeEngine:
         self._key = jax.random.PRNGKey(scfg.seed)
         self.cache = None
         self.pos = 0
+        self._decode_plans: dict | None = None
 
     # -- sampling --------------------------------------------------------------
 
@@ -58,15 +138,30 @@ class ServeEngine:
             sub, logits / self.scfg.temperature, axis=-1
         ).astype(jnp.int32)
 
-    # -- serving ---------------------------------------------------------------
+    # -- decode-shape plans ----------------------------------------------------
+
+    @property
+    def decode_plans(self) -> dict:
+        """Tune-cache consultation for this engine's decode batch geometry
+        (lazy; see ``consult_decode_plans``)."""
+        if self._decode_plans is None:
+            self._decode_plans = consult_decode_plans(self.cfg, self.scfg.batch)
+        return self._decode_plans
+
+    def decode_plan_report(self) -> str:
+        """One-line summary: how many decode GEMMs run on tuned plans."""
+        plans = self.decode_plans
+        hits = sum(1 for _, p in plans.values() if p is not None)
+        return f"decode plans: {hits}/{len(plans)} tuned (batch={self.scfg.batch})"
+
+    # -- synchronized serving --------------------------------------------------
 
     def prefill(self, batch: dict) -> jax.Array:
-        """Prime caches from a synchronized prompt batch; returns the first
-        sampled continuation token (prefill emits last-position logits)."""
+        """Prime the resident cache from a synchronized prompt batch; returns
+        the first sampled continuation token (prefill emits last-position
+        logits)."""
         logits, self.cache = self._prefill(self.params, batch)
-        self.pos = batch["tokens"].shape[1]
-        if self.cfg.frontend == "vit":
-            self.pos += self.cfg.n_patches
+        self.pos = self.prompt_positions(batch)
         return self._sample(logits)
 
     def decode(self, tokens: jax.Array, n_steps: int) -> jax.Array:
@@ -92,15 +187,41 @@ class ServeEngine:
 
     def reset_slots(self, slot_mask: jax.Array) -> None:
         """Clear finished slots (continuous-batching rotation): zero their
-        cache entries and positions so new prompts can prefill into them."""
+        float cache state and set their position arrays to -1 so the freed
+        slot's old keys are masked out of every later step (``pos = 0`` is a
+        valid position -- see ``kvpool.clear_slots``)."""
         if self.cache is None:
             return
+        self.cache = clear_slots(
+            self.cache, jnp.asarray(slot_mask), self.scfg.batch
+        )
 
-        def clear(leaf):
-            if leaf.ndim >= 2 and leaf.shape[1] == self.scfg.batch:
-                shape = (1, self.scfg.batch) + (1,) * (leaf.ndim - 2)
-                m = slot_mask.reshape(shape).astype(leaf.dtype)
-                return leaf * (1 - m)
-            return leaf
+    # -- continuous-batching primitives ---------------------------------------
 
-        self.cache = jax.tree.map(clear, self.cache)
+    def prompt_positions(self, batch: dict) -> int:
+        """Positions a prompt occupies in the cache (incl. non-text prefix)."""
+        n = batch["tokens"].shape[1]
+        if self.cfg.frontend == "vit":
+            n += self.cfg.n_patches
+        return n
+
+    def prefill_request(self, batch: dict):
+        """Prefill one admission unit WITHOUT touching the resident cache.
+
+        batch is a batch-1 prompt dict; returns (first sampled token
+        (1, 1[, ncb]), primed batch-1 cache at this engine's max_len) for the
+        KV pool to scatter into the assigned slot.
+        """
+        logits, cache = self._prefill(self.params, batch)
+        return self._sample(logits), cache
+
+    def decode_slots(self, tokens: jax.Array, cache: Any, pos: jax.Array):
+        """One continuous-batching decode step over an external cache.
+
+        tokens: (B, 1[, ncb]) last token per slot (garbage for empty slots);
+        pos: (B,) int32 per-slot absolute positions, -1 for empty slots.
+        Returns (sampled tokens (B, 1[, ncb]), new cache).  The cache is
+        donated, matching the synchronized path's allocation-free decode.
+        """
+        logits, cache = self._decode(self.params, tokens, cache, pos)
+        return self._sample(logits), cache

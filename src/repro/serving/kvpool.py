@@ -1,0 +1,141 @@
+"""Slot-pooled KV cache manager for continuous batching.
+
+The pool owns one batched decode cache (``model.init_cache(n_slots, ...)``)
+whose batch axis is a pool of *slots*; each slot holds at most one in-flight
+request.  The layout invariants it relies on:
+
+  * every cache leaf from ``transformer.init_cache`` carries the batch axis
+    at position 1 (axis 0 is the stacked layer/group dim), so writing one
+    slot is a single ``dynamic_update_slice_in_dim(axis=1)`` per leaf and
+    works identically for GQA/SWA/MLA KV caches and SSM/hybrid state caches;
+  * the caches' per-slot absolute-position arrays (``pos``, the only integer
+    leaves) drive the attention masking rule ``valid(k) = pos[k] >= 0``.  A
+    free slot is ``pos = -1`` everywhere, which makes its old keys
+    unreachable the moment the slot is released -- freeing is a masking
+    operation, not (only) a zeroing one.
+
+Host-side, ``positions[slot]`` mirrors the device state: the next absolute
+position the slot will write (prompt length right after admission, +1 per
+decoded token), or -1 while free.  That vector, as ``pos_vector()``, is
+exactly the per-slot position argument of the vector-``pos`` decode step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_slot(pool: Any, one: Any, slot: jax.Array) -> Any:
+    """Write a batch-1 cache pytree into slot ``slot`` of the pooled cache."""
+    return jax.tree.map(
+        lambda p, o: jax.lax.dynamic_update_slice_in_dim(
+            p, o.astype(p.dtype), slot, axis=1
+        ),
+        pool,
+        one,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(2,), donate_argnums=(0,))
+def clear_slots(cache: Any, slot_mask: jax.Array, batch: int) -> Any:
+    """Clear masked slots in every cache leaf with a (.., batch, ..) axis 1.
+
+    The one implementation of the slot-clearing invariant (shared by
+    ``KVPool.free`` and ``ServeEngine.reset_slots``): float state is zeroed,
+    while integer leaves -- the per-slot absolute-position arrays -- are set
+    to **-1**, because ``pos = 0`` is a *valid* position under the masking
+    rule ``valid(k) = pos[k] >= 0``; zeroing them would leave the stale key
+    written at slot 0 attendable by the next request.
+    """
+
+    def clear(leaf):
+        if leaf.ndim >= 2 and leaf.shape[1] == batch:
+            shape = (1, batch) + (1,) * (leaf.ndim - 2)
+            m = slot_mask.reshape(shape).astype(bool)
+            if jnp.issubdtype(leaf.dtype, jnp.integer):
+                return jnp.where(m, -1, leaf)
+            return jnp.where(m, 0, leaf).astype(leaf.dtype)
+        return leaf
+
+    return jax.tree.map(clear, cache)
+
+
+class KVPool:
+    """Fixed-size pool of KV/state cache slots shared by in-flight requests."""
+
+    def __init__(self, model, n_slots: int, max_len: int, dtype=None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.dtype = dtype or jnp.dtype(model.cfg.dtype)
+        self.cache = model.init_cache(n_slots, max_len, self.dtype)
+        self.positions = np.full((n_slots,), -1, np.int64)
+        # LIFO free list: the most recently freed slot is reused first, which
+        # keeps the active slots dense in low indices under light load.
+        self._free = list(range(n_slots - 1, -1, -1))
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def occupancy(self) -> float:
+        return self.n_active / self.n_slots
+
+    def active_slots(self) -> list[int]:
+        free = set(self._free)
+        return [s for s in range(self.n_slots) if s not in free]
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    def alloc(self) -> int | None:
+        """Claim a free slot (or None).  The slot stays masked (pos = -1)
+        until ``write_prefill`` lands a request in it."""
+        if not self._free:
+            return None
+        return self._free.pop()
+
+    def free(self, slot: int) -> None:
+        """Release a slot: mark every position -1 (old keys become
+        unreachable under the masking rule) and zero the float state."""
+        if slot in self._free or not 0 <= slot < self.n_slots:
+            raise ValueError(f"free of invalid/already-free slot {slot}")
+        self.positions[slot] = -1
+        self.cache = clear_slots(
+            self.cache, jnp.arange(self.n_slots) == slot, self.n_slots
+        )
+        self._free.append(slot)
+
+    def write_prefill(self, slot: int, cache_one: Any, n_tokens: int) -> None:
+        """Scatter a batch-1 primed cache (from ``model.prefill`` at this
+        pool's max_len) into ``slot``; its next write position becomes
+        ``n_tokens`` (prompt length incl. any non-text prefix)."""
+        shapes = jax.tree.map(lambda a: a.shape[1], cache_one)
+        if any(s != 1 for s in jax.tree.leaves(shapes)):
+            raise ValueError("write_prefill expects a batch-1 cache")
+        self.cache = _scatter_slot(self.cache, cache_one, jnp.int32(slot))
+        self.positions[slot] = n_tokens
+
+    # -- decode-step interface ----------------------------------------------
+
+    def pos_vector(self) -> jax.Array:
+        """(n_slots,) int32 per-slot positions for the vector-pos decode."""
+        return jnp.asarray(self.positions, jnp.int32)
+
+    def advance(self, slots) -> None:
+        """One token decoded in each of ``slots``."""
+        for s in slots:
+            self.positions[s] += 1
