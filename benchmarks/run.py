@@ -1,6 +1,6 @@
 """Benchmark entry point: one function per paper table.
 
-    PYTHONPATH=src python -m benchmarks.run [table1|table2|table6|roofline|tune|serve]
+    PYTHONPATH=src python -m benchmarks.run [table1|table2|table6|roofline|tune|serve|tp]
 
   table1    DSE over block shapes: analytical fitter/roofline columns plus
             the measured-time column (the f_max analogue) from repro.tune
@@ -12,6 +12,10 @@
   serve     continuous vs synchronized batching on one ragged Poisson trace:
             tokens/s, p50/p99 step latency, mean slot occupancy (the serving
             analogue of the paper's DSP-utilisation column); BENCH JSON lines
+  tp        tensor-parallel GEMM on a forced 8-device mesh: overlapped
+            collective matmul vs gather-then-matmul vs single-device
+            (subprocess -- the device-count flag must precede jax init);
+            BENCH JSON lines
 """
 
 from __future__ import annotations
@@ -27,6 +31,7 @@ def main() -> None:
         table1_dse,
         table2_scaling,
         table6_baseline,
+        tp_matmul,
         tune_report,
     )
 
@@ -37,6 +42,7 @@ def main() -> None:
         "roofline": roofline_report.run,
         "tune": tune_report.run,
         "serve": serve_throughput.run,
+        "tp": tp_matmul.run,
     }
     want = sys.argv[1:] or list(tables)
     for name in want:

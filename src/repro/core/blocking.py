@@ -40,6 +40,11 @@ class BlockPlan:
     in_dtype_bytes: int = 2  # bf16 streams
     acc_dtype_bytes: int = 4  # fp32 accumulator, always
     double_buffer: bool = True
+    # -- level-3 (mesh): degree of the "model" axis this plan shards over.
+    # tp=1 is the single-chip plan; tp>1 describes the collective-matmul
+    # decomposition of distributed/collective_matmul.py (A row-sharded, B
+    # column-sharded, tp ring steps of an (m/tp, k) x (k, n/tp) block each).
+    tp: int = 1
 
     # -- level-1 (VMEM) occupancy: the "fitter" check -----------------------
 
@@ -120,6 +125,36 @@ class BlockPlan:
             if self.compute_seconds(chip) >= self.memory_seconds(chip)
             else "memory"
         )
+
+    # -- level-3 (mesh) balance: eq. (14) at the ICI level -------------------
+    # The overlapped collective matmul runs tp ring steps; during each, one
+    # A chunk of (m/tp, k) crosses one link while an (m/tp, k) x (k, n/tp)
+    # block matmul computes.  "Balanced" = the hop hides under the step, the
+    # mesh-level analogue of the paper's stall-free condition.
+
+    def shard_shape(self) -> tuple[int, int, int]:
+        """The per-ring-step (m, n, k) problem each shard computes."""
+        return (self.m // self.tp, self.n // self.tp, self.k)
+
+    def hop_bytes(self) -> int:
+        """Bytes one ``ppermute`` hop moves (one A chunk)."""
+        if self.tp == 1:
+            return 0
+        return (self.m // self.tp) * self.k * self.in_dtype_bytes
+
+    def hop_seconds(self, chip: hw.Chip | str | None = None, links: int = 1) -> float:
+        return self.hop_bytes() / (hw.get_chip(chip).ici_bw_per_link * links)
+
+    def shard_step_seconds(self, chip: hw.Chip | str | None = None) -> float:
+        """Compute time of one ring step's block matmul on one shard."""
+        sm, sn, sk = self.shard_shape()
+        return 2 * sm * sn * sk / hw.get_chip(chip).peak_flops_bf16
+
+    def mesh_balanced(self, chip: hw.Chip | str | None = None, links: int = 1) -> bool:
+        """Collective-bytes-under-compute: every hop hides under a step."""
+        if self.tp == 1:
+            return True
+        return self.hop_seconds(chip, links) <= self.shard_step_seconds(chip)
 
 
 def _round_to(x: int, quantum: int) -> int:

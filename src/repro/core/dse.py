@@ -40,10 +40,17 @@ class DSERecord:
     # None (analytical half only); ``attach_measurements`` / repro.tune fill
     # it in from real kernel timings.
     measured_us: float | None = None
+    # Level-3 (mesh) columns: the "model"-axis degree the candidate shards
+    # over, and whether each ring hop of the overlapped collective matmul
+    # hides under one per-shard block matmul (the collective-bytes-under-
+    # compute constraint -- the mesh-level fitter column).
+    tp: int = 1
+    mesh_balanced: bool = True
 
     @property
     def ident(self) -> str:
-        return f"{self.bm}x{self.bn}x{self.bk}"
+        base = f"{self.bm}x{self.bn}x{self.bk}"
+        return base if self.tp == 1 else f"{base}@tp{self.tp}"
 
     @property
     def analytical_us(self) -> float:
@@ -64,33 +71,52 @@ def explore(
     bks=(128, 256, 512, 1024, 2048),
     in_dtype_bytes: int = 2,
     chip: hw.Chip | str | None = None,
+    tps=(1,),
 ) -> list[DSERecord]:
-    """Enumerate candidate block shapes for an (M, N, K) matmul."""
+    """Enumerate candidate block shapes for an (M, N, K) matmul.
+
+    ``tps`` adds the mesh level to the exploration: for tp > 1 the problem
+    each chip solves is the per-shard (M/tp, N/tp, K) of the overlapped
+    collective matmul, the roofline columns describe that per-shard problem,
+    and ``mesh_balanced`` records whether each ring hop's collective bytes
+    hide under one block matmul (eq. 14 one level up; candidates whose M or
+    N does not divide tp are skipped, like any other infeasible geometry).
+    """
     chip = hw.get_chip(chip)
     records = []
-    for bm, bn, bk in itertools.product(bms, bns, bks):
-        if m % bm or n % bn or k % bk:
+    for tp in tps:
+        if m % tp or n % tp:
             continue
-        plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
-        fits = plan.fits_vmem(chip) and plan.mxu_aligned(chip)
-        records.append(
-            DSERecord(
-                bm=bm,
-                bn=bn,
-                bk=bk,
-                vmem_kib=plan.vmem_bytes() / 1024,
-                fits=fits,
-                arithmetic_intensity=plan.arithmetic_intensity(),
-                compute_bound=plan.compute_bound(chip),
-                compute_us=plan.compute_seconds(chip) * 1e6,
-                memory_us=plan.memory_seconds(chip) * 1e6,
-                bound_by=plan.bound_by(chip),
-                m=m,
-                n=n,
-                k=k,
-                in_dtype_bytes=in_dtype_bytes,
-            )
+        sm, sn = m // tp, n // tp
+        mesh_plan = BlockPlan(
+            m, n, k, 0, 0, 0, in_dtype_bytes=in_dtype_bytes, tp=tp
         )
+        balanced = mesh_plan.mesh_balanced(chip)  # block-shape invariant
+        for bm, bn, bk in itertools.product(bms, bns, bks):
+            if sm % bm or sn % bn or k % bk:
+                continue
+            plan = BlockPlan(sm, sn, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+            fits = plan.fits_vmem(chip) and plan.mxu_aligned(chip)
+            records.append(
+                DSERecord(
+                    bm=bm,
+                    bn=bn,
+                    bk=bk,
+                    vmem_kib=plan.vmem_bytes() / 1024,
+                    fits=fits,
+                    arithmetic_intensity=plan.arithmetic_intensity(),
+                    compute_bound=plan.compute_bound(chip),
+                    compute_us=plan.compute_seconds(chip) * 1e6,
+                    memory_us=plan.memory_seconds(chip) * 1e6,
+                    bound_by=plan.bound_by(chip),
+                    m=m,
+                    n=n,
+                    k=k,
+                    in_dtype_bytes=in_dtype_bytes,
+                    tp=tp,
+                    mesh_balanced=balanced,
+                )
+            )
     return records
 
 
@@ -119,6 +145,11 @@ def best(records: list[DSERecord]) -> DSERecord:
     feasible = [r for r in records if r.fits]
     if not feasible:
         raise ValueError("no feasible block shape (all 'fitter failed')")
+    # Mesh-level fitter: prefer candidates whose collective hops hide under
+    # compute; if the whole mesh is unbalanced, rank the imbalanced anyway
+    # (the caller asked for this tp, stalls and all).
+    balanced = [r for r in feasible if r.mesh_balanced]
+    feasible = balanced or feasible
     measured = [r for r in feasible if r.measured_us is not None]
     if measured:
         return min(measured, key=lambda r: (r.measured_us, r.analytical_us))

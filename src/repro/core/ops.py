@@ -91,9 +91,15 @@ def matmul(
 
     x2 = x.reshape(-1, k)
     if backend == "pallas-systolic":
+        from repro.distributed import collective_matmul as _cm
         from repro.kernels.systolic import ops as systolic_ops
 
-        y2 = systolic_ops.matmul(x2, w, out_dtype=out_dtype)
+        # Under an active ``distributed.tensor_parallel(mesh)`` context,
+        # eligible projections run as the overlapped shard_map collective
+        # matmul (DESIGN.md §6); anything indivisible falls through.
+        y2 = _cm.maybe_tp_matmul(x2, w, out_dtype=out_dtype)
+        if y2 is None:
+            y2 = systolic_ops.matmul(x2, w, out_dtype=out_dtype)
     elif backend == "reference":
         from repro.core.blocking import BlockPlan
         from repro.core.systolic import blocked_matmul

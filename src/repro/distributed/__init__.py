@@ -1,5 +1,12 @@
-"""Distribution: sharding rules, fault tolerance."""
+"""Distribution: sharding rules, collective matmul, fault tolerance."""
 
+from repro.distributed.collective_matmul import (  # noqa: F401
+    all_gather_matmul,
+    current_tensor_parallel,
+    reduce_scatter_matmul,
+    tensor_parallel,
+    tp_matmul,
+)
 from repro.distributed.sharding import (  # noqa: F401
     batch_shardings,
     batch_specs,

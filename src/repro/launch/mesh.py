@@ -29,7 +29,14 @@ def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / single-host runs)."""
     n = len(jax.devices())
     if data * model > n:
-        raise ValueError(f"requested {data}x{model} mesh on {n} devices")
+        raise ValueError(
+            f"requested a {data}x{model} ('data', 'model') mesh but only "
+            f"{n} device(s) are visible. On CPU, fake a mesh by setting "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={data * model} "
+            f"in the environment BEFORE the first jax call (e.g. "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={data * model} "
+            f"python -m repro.launch.serve --model-parallel {model} ...)."
+        )
     return jax.make_mesh((data, model), ("data", "model"))
 
 

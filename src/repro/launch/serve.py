@@ -11,6 +11,16 @@ scheduler keeps refilling freed slots so the matmul units stay busy)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
         --continuous --requests 16 --slots 4 --rate 0.5
+
+Tensor-parallel decode (either mode): ``--model-parallel N`` runs the engine
+over a (1, N) ("data", "model") mesh -- params TP-sharded by the
+``distributed.sharding`` rules, caches sharded by GSPMD propagation.  Keep
+N <= the arch's head count (shard heads, not head_dim; the engine warns
+otherwise).  On CPU, fake the devices first::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --model-parallel 4 --batch 4 --prompt-len 64 --gen 32
 """
 
 from __future__ import annotations
@@ -32,6 +42,12 @@ from repro.serving import (
 
 
 def _build_engine(model, params, args, max_len: int, batch: int) -> ServeEngine:
+    mesh = None
+    if args.model_parallel > 1:
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(1, args.model_parallel)
+        print(f"tensor-parallel mesh: 1x{args.model_parallel} ('data', 'model')")
     return ServeEngine(
         model,
         params,
@@ -41,6 +57,7 @@ def _build_engine(model, params, args, max_len: int, batch: int) -> ServeEngine:
             temperature=args.temperature,
             seed=args.seed,
         ),
+        mesh=mesh,
     )
 
 
@@ -130,6 +147,15 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--model-parallel",
+        type=int,
+        default=1,
+        metavar="N",
+        help="tensor-parallel degree: serve over a (1, N) ('data', 'model') "
+        "mesh (needs N visible devices; on CPU set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+    )
     # continuous-batching mode
     ap.add_argument(
         "--continuous",

@@ -30,6 +30,7 @@ on the analytical fallback.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
@@ -110,10 +111,39 @@ def consult_decode_plans(cfg, batch: int, chip=None) -> dict:
 
 
 class ServeEngine:
-    def __init__(self, model: Model, params: Any, scfg: ServeConfig):
+    def __init__(
+        self,
+        model: Model,
+        params: Any,
+        scfg: ServeConfig,
+        mesh: jax.sharding.Mesh | None = None,
+    ):
+        """``mesh`` opts into tensor-parallel serving (DESIGN.md §6): params
+        are TP-sharded by the ``distributed.sharding`` rules, every jitted
+        step traces under the mesh with activation annotations enabled, and
+        GSPMD propagates the layout through prefill caches and decode steps.
+        ``mesh=None`` is the unchanged single-device engine."""
         self.model = model
         self.cfg = model.cfg
         self.scfg = scfg
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.distributed import sharding as dist_sharding
+
+            tp = mesh.shape.get("model", 1)
+            n_heads = getattr(model.cfg, "n_heads", None)
+            if n_heads and tp > n_heads:
+                import warnings
+
+                warnings.warn(
+                    f"model-parallel degree {tp} exceeds n_heads={n_heads}: "
+                    "the packed QKV sharding then splits the rotary head_dim "
+                    "across devices, which is the wrong TP layout (shard "
+                    "heads, not head_dim) and miscompiles on XLA:CPU forced "
+                    f"meshes; use tp <= {n_heads}."
+                )
+            p_sh = dist_sharding.param_shardings(params, mesh)
+            params = jax.device_put(params, p_sh)
         self.params = params
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len=scfg.max_len)
@@ -126,6 +156,18 @@ class ServeEngine:
         self.cache = None
         self.pos = 0
         self._decode_plans: dict | None = None
+
+    @contextlib.contextmanager
+    def _mesh_scope(self):
+        """Trace/run scope: no-op single-device, or the TP mesh context with
+        the opt-in activation-sharding annotations enabled."""
+        if self.mesh is None:
+            yield
+        else:
+            from repro.distributed import annotate
+
+            with self.mesh, annotate.annotations(self.mesh):
+                yield
 
     # -- sampling --------------------------------------------------------------
 
@@ -160,7 +202,8 @@ class ServeEngine:
         """Prime the resident cache from a synchronized prompt batch; returns
         the first sampled continuation token (prefill emits last-position
         logits)."""
-        logits, self.cache = self._prefill(self.params, batch)
+        with self._mesh_scope():
+            logits, self.cache = self._prefill(self.params, batch)
         self.pos = self.prompt_positions(batch)
         return self._sample(logits)
 
@@ -171,13 +214,14 @@ class ServeEngine:
             raise RuntimeError("prefill() first")
         outs = []
         tok = tokens
-        for _ in range(n_steps):
-            logits, self.cache = self._decode(
-                self.params, tok, self.cache, jnp.int32(self.pos)
-            )
-            tok = self._sample(logits)
-            outs.append(tok)
-            self.pos += 1
+        with self._mesh_scope():
+            for _ in range(n_steps):
+                logits, self.cache = self._decode(
+                    self.params, tok, self.cache, jnp.int32(self.pos)
+                )
+                tok = self._sample(logits)
+                outs.append(tok)
+                self.pos += 1
         return jnp.concatenate(outs, axis=1)
 
     def generate(self, batch: dict, n_steps: int) -> jax.Array:
@@ -212,7 +256,8 @@ class ServeEngine:
         (1, 1[, ncb]), primed batch-1 cache at this engine's max_len) for the
         KV pool to scatter into the assigned slot.
         """
-        logits, cache = self._prefill(self.params, batch)
+        with self._mesh_scope():
+            logits, cache = self._prefill(self.params, batch)
         return self._sample(logits), cache
 
     def decode_slots(self, tokens: jax.Array, cache: Any, pos: jax.Array):
@@ -223,5 +268,6 @@ class ServeEngine:
         Returns (sampled tokens (B, 1[, ncb]), new cache).  The cache is
         donated, matching the synchronized path's allocation-free decode.
         """
-        logits, cache = self._decode(self.params, tokens, cache, pos)
+        with self._mesh_scope():
+            logits, cache = self._decode(self.params, tokens, cache, pos)
         return self._sample(logits), cache

@@ -22,6 +22,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--k", type=int, default=512)
     p.add_argument("--dtype", default="bfloat16")
     p.add_argument("--activation", default="none")
+    p.add_argument("--tp", type=int, default=1,
+                   help="'model'-axis mesh degree: tune the per-shard problem "
+                        "of the tp-way collective matmul (cache key carries tp)")
     p.add_argument("--backend", default="pallas-systolic")
     p.add_argument("--chip", default=None, help="registry name (default: current)")
     p.add_argument("--top-k", type=int, default=8, dest="top_k",
@@ -78,11 +81,13 @@ def main(argv: list[str] | None = None) -> int:
         method=args.method,
         cache=cache,
         force=args.force,
+        tp=args.tp,
     )
 
     key = result.key
     print(f"# problem  {key.backend} {key.chip} "
-          f"M={key.m} N={key.n} K={key.k} {key.dtype} act={key.activation}")
+          f"M={key.m} N={key.n} K={key.k} {key.dtype} act={key.activation} "
+          f"tp={key.tp}")
     if result.cache_hit:
         print("# cache hit -- no measurement performed (use --force to re-tune)")
     else:

@@ -52,12 +52,19 @@ def autotune(
     cache: PlanCache | None = None,
     measure_fn: MeasureFn | None = None,
     force: bool = False,
+    tp: int = 1,
 ) -> TuneResult:
     """Tune one (M, N, K, dtype, activation) problem and persist the winner.
 
     Deterministic given a deterministic ``measure_fn``: candidates come out
     of ``dse.explore`` in a fixed order, ties in measured time break on the
     analytical bound and then on the geometry itself.
+
+    ``tp > 1`` tunes the tp-way collective-matmul decomposition of the same
+    global problem (cache key schema v2 carries tp): candidates enumerate
+    the per-shard (M/tp, N/tp, K) geometry and the built-in measurement
+    times that per-shard kernel -- the ring hops are designed to hide under
+    it, so the per-shard kernel time is the step time of the sharded GEMM.
     """
     import jax.numpy as jnp
 
@@ -80,6 +87,7 @@ def autotune(
         k=int(k),
         dtype=dtype,
         activation=activation,
+        tp=int(tp),
     )
 
     if not force:
@@ -89,15 +97,19 @@ def autotune(
 
     in_bytes = hw.DTYPE_BYTES.get(dtype, 2)
     cands = cand_mod.generate(
-        m, n, k, in_dtype_bytes=in_bytes, chip=chip, top_k=top_k
+        m, n, k, in_dtype_bytes=in_bytes, chip=chip, top_k=top_k, tp=tp
     )
 
     if measure_fn is None:
+        # For tp > 1 the measurable unit is the per-shard kernel of one ring
+        # step (the collective is designed to hide under it).
+        mm, nn = m // tp, n // tp
+
         def measure_fn(rec: dse.DSERecord) -> measure_mod.Measurement | None:
-            if backend == "reference" and (m % rec.bm or n % rec.bn or k % rec.bk):
+            if backend == "reference" and (mm % rec.bm or nn % rec.bn or k % rec.bk):
                 return None  # reference impl cannot pad; skip this geometry
             return measure_mod.measure_matmul(
-                m, n, k, rec.bm, rec.bn, rec.bk,
+                mm, nn, k, rec.bm, rec.bn, rec.bk,
                 dtype=dtype, activation=activation, backend=backend,
                 method=method, repeats=repeats, warmup=warmup,
             )

@@ -16,6 +16,33 @@ Design constraints:
     schema change invalidates old files instead of mis-reading them;
   * the location is overridable via ``REPRO_TUNE_CACHE`` (tests point it at a
     tmpdir; clusters point it at shared storage).
+
+On-disk JSON schema (version 2)::
+
+    {
+      "version": 2,
+      "entries": {
+        "<backend>|<chip>|<M>|<N>|<K>|<dtype>|<activation>|tp<TP>": {
+          "bm": int, "bn": int, "bk": int,   // winning block geometry
+          "mean_us": float,                  // mean measured wall time
+          "best_us": float,                  // best-of-repeats (ranking key)
+          "method": str,                     // "device-wall" | "interpret-wall"
+                                             // | "xla-proxy" | "stub"
+          "repeats": int                     // timing repeats behind mean/best
+        }, ...
+      }
+    }
+
+Key fields: ``backend`` is the kernel family ("pallas-systolic",
+"pallas-grouped", "reference"); ``chip`` the ``repro.core.hw`` registry name
+the measurement targeted; ``dtype`` the canonical numpy name of the input
+dtype; ``activation`` the fused-epilogue name ("none" when unfused); ``TP``
+the "model"-axis mesh degree the plan was measured under (1 = single chip).
+Version history: v2 added the ``tp`` key segment -- measured plans are
+per-(chip, mesh), because the per-shard problem of the collective matmul
+(DESIGN.md §6) is a different tuning problem at every mesh shape.  A v1
+file fails the version check and reads as empty, so stale single-chip
+winners are re-measured rather than silently reused for sharded problems.
 """
 
 from __future__ import annotations
@@ -28,7 +55,7 @@ import tempfile
 import threading
 import warnings
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 _ENV_VAR = "REPRO_TUNE_CACHE"
 
@@ -48,7 +75,10 @@ class CacheKey:
     ``backend`` distinguishes the kernel family the plan drives
     ("pallas-systolic", "pallas-grouped", "reference"); ``chip`` is the
     registry name the measurement targeted.  For the grouped kernel the
-    (m, n, k) triple holds the *per-expert* (c, n, k) problem.
+    (m, n, k) triple holds the *per-expert* (c, n, k) problem.  ``tp`` is
+    the "model"-axis mesh degree (schema v2): the (m, n, k) triple stays
+    the GLOBAL problem, so a tp=8 entry answers "best per-shard blocks for
+    this problem sharded 8 ways", distinct from the tp=1 single-chip entry.
     """
 
     backend: str
@@ -58,6 +88,7 @@ class CacheKey:
     k: int
     dtype: str
     activation: str = "none"
+    tp: int = 1
 
     def encode(self) -> str:
         return "|".join(
@@ -69,6 +100,7 @@ class CacheKey:
                 str(self.k),
                 self.dtype,
                 self.activation,
+                f"tp{self.tp}",
             ]
         )
 
@@ -224,10 +256,13 @@ def lookup_block(
     k: int,
     dtype: str,
     activation: str = "none",
+    tp: int = 1,
 ) -> TunedPlan | None:
     """Hot-path helper: tuned plan for a problem, or None.  Never raises."""
     try:
-        key = CacheKey(backend, chip, int(m), int(n), int(k), str(dtype), activation)
+        key = CacheKey(
+            backend, chip, int(m), int(n), int(k), str(dtype), activation, int(tp)
+        )
         return default_cache().lookup(key)
     except Exception:  # pragma: no cover - defensive: dispatch must not die
         return None
@@ -241,20 +276,28 @@ def tuned_block(
     k: int,
     dtype,
     activation: str = "none",
+    tp: int = 1,
+    clamp_to: tuple[int, int, int] | None = None,
 ) -> tuple[int, int, int] | None:
     """The one dispatch-side consultation point: clamped geometry or None.
 
     ``chip`` is a resolved ``hw`` Chip (its sublane/lane dims drive the
-    clamp to the padded problem).  Shared by the systolic and grouped
-    wrappers so the key schema and clamp rule live in exactly one place.
+    clamp to the padded problem).  Shared by the systolic, grouped, and
+    collective-matmul wrappers so the key schema and clamp rule live in
+    exactly one place.  ``clamp_to`` overrides the clamp target when the
+    problem the kernel actually runs differs from the keyed problem: the
+    tp-way collective matmul keys the GLOBAL (m, n, k) but each ring step
+    runs a per-shard subproblem, so an over-large cached geometry must
+    clamp to that, not to the global shapes.
     """
-    hit = lookup_block(backend, chip.name, m, n, k, str(dtype), activation)
+    hit = lookup_block(backend, chip.name, m, n, k, str(dtype), activation, tp)
     if hit is None:
         return None
     from repro.core.blocking import round_up
 
+    cm, cn, ck = clamp_to or (m, n, k)
     return (
-        min(hit.bm, round_up(m, chip.sublane_dim)),
-        min(hit.bn, round_up(n, chip.lane_dim)),
-        min(hit.bk, round_up(k, chip.lane_dim)),
+        min(hit.bm, round_up(cm, chip.sublane_dim)),
+        min(hit.bn, round_up(cn, chip.lane_dim)),
+        min(hit.bk, round_up(ck, chip.lane_dim)),
     )

@@ -52,6 +52,7 @@ def generate(
     bns=DEFAULT_BNS,
     bks=DEFAULT_BKS,
     top_k: int | None = 8,
+    tp: int = 1,
 ) -> list[Candidate]:
     """Fitter-pruned, analytically-ranked candidates for an (M, N, K) matmul.
 
@@ -59,33 +60,45 @@ def generate(
     the analytical roofline bound.  Axes that do not divide the problem are
     dropped by ``dse.explore`` itself; if nothing divides (awkward primes),
     we fall back to the single clamped heuristic block so the tuner always
-    has something to measure.
+    has something to measure.  ``tp > 1`` enumerates the per-shard problem
+    of the tp-way collective matmul instead, with mesh-unbalanced candidates
+    (collective bytes that cannot hide under compute) ranked last.
     """
     chip = hw.get_chip(chip)
+    if m % tp or n % tp:
+        raise ValueError(
+            f"({m},{n}) does not shard over tp={tp}; pick a dividing degree"
+        )
     records = dse.explore(
         m, n, k, bms=bms, bns=bns, bks=bks,
-        in_dtype_bytes=in_dtype_bytes, chip=chip,
+        in_dtype_bytes=in_dtype_bytes, chip=chip, tps=(tp,),
     )
     survivors = [r for r in records if r.fits]
     if not survivors:
-        survivors = [_heuristic_record(m, n, k, in_dtype_bytes, chip)]
-    survivors.sort(key=lambda r: (r.analytical_us, -r.arithmetic_intensity))
+        survivors = [_heuristic_record(m, n, k, in_dtype_bytes, chip, tp)]
+    survivors.sort(
+        key=lambda r: (not r.mesh_balanced, r.analytical_us, -r.arithmetic_intensity)
+    )
     if top_k is not None:
         survivors = survivors[:top_k]
     return [Candidate(record=r, rank=i) for i, r in enumerate(survivors)]
 
 
-def _heuristic_record(m, n, k, in_dtype_bytes, chip) -> dse.DSERecord:
+def _heuristic_record(m, n, k, in_dtype_bytes, chip, tp: int = 1) -> dse.DSERecord:
     """The clamped balance-equation plan as a degenerate candidate set.
 
     Delegates to the systolic dispatcher's own clamp so the tuner's fallback
-    is, by construction, the exact geometry the kernel would run untuned.
+    is, by construction, the exact geometry the kernel would run untuned --
+    for tp > 1, the geometry of the per-shard (M/tp, N/tp, K) ring step
+    (the Pallas wrapper pads, so non-dividing blocks are fine).
     """
     from repro.core.blocking import BlockPlan
     from repro.kernels.systolic.ops import _clamp_plan
 
-    bm, bn, bk = _clamp_plan(m, n, k, None, chip)
-    p = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+    sm, sn = m // tp, n // tp
+    bm, bn, bk = _clamp_plan(sm, sn, k, None, chip)
+    p = BlockPlan(sm, sn, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+    mesh_plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes, tp=tp)
     return dse.DSERecord(
         bm=bm,
         bn=bn,
@@ -101,4 +114,6 @@ def _heuristic_record(m, n, k, in_dtype_bytes, chip) -> dse.DSERecord:
         n=n,
         k=k,
         in_dtype_bytes=in_dtype_bytes,
+        tp=tp,
+        mesh_balanced=mesh_plan.mesh_balanced(chip),
     )

@@ -56,10 +56,23 @@ def test_zero1_adds_data_axis():
     assert z["w_gate"][0] == "data" or z["w_gate"][0] is None
 
 
-@pytest.mark.parametrize("case", ["train_equiv", "decode_equiv", "moe_ep"])
+@pytest.mark.parametrize(
+    "case",
+    [
+        "train_equiv",
+        "decode_equiv",
+        "moe_ep",
+        "tp_allgather",
+        "tp_reducescatter",
+        "tp_ops_dispatch",
+        "tp_serve_equiv",
+    ],
+)
 def test_multidevice_subprocess(case):
     """pjit on a (4, 2) mesh reproduces the single-device step bit-for-bit
-    (well, fp32-for-fp32)."""
+    (well, fp32-for-fp32); the tp_* cases run the shard_map collective
+    matmul on an 8-way "model" mesh against the single-device systolic
+    reference (uneven K/N, bf16+f32, both ppermute ring directions)."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = env.get("PYTHONPATH", "") + os.pathsep + os.path.abspath("src")
@@ -69,3 +82,89 @@ def test_multidevice_subprocess(case):
     )
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
     assert "PASS" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Mesh-level blocking / plumbing (no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def test_make_local_mesh_oversubscribed_names_the_fix():
+    """Asking for more devices than exist must fail loudly, naming the
+    XLA_FLAGS escape hatch (never fall back to a silent smaller mesh)."""
+    from repro.launch.mesh import make_local_mesh
+
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+        make_local_mesh(n + 1, 2)
+
+
+def test_blockplan_mesh_level():
+    from repro.core.blocking import BlockPlan
+
+    plan = BlockPlan(2048, 1024, 512, 256, 128, 512, tp=8)
+    assert plan.shard_shape() == (256, 128, 512)
+    assert plan.hop_bytes() == 256 * 512 * 2
+    # tp=1 plans are trivially balanced and move no collective bytes.
+    single = BlockPlan(2048, 1024, 512, 256, 128, 512)
+    assert single.hop_bytes() == 0 and single.mesh_balanced()
+
+
+def test_dse_explores_mesh_level():
+    from repro.core import dse
+
+    recs = dse.explore(1024, 1024, 512, tps=(1, 2, 4, 8))
+    assert {r.tp for r in recs} == {1, 2, 4, 8}
+    for r in recs:
+        if r.tp > 1:
+            assert r.ident.endswith(f"@tp{r.tp}")
+    # indivisible tp is skipped, like any other infeasible geometry
+    assert all(r.tp != 3 for r in dse.explore(1024, 1024, 512, tps=(3,)))
+
+
+def test_tune_cache_key_carries_tp():
+    from repro.tune.cache import CacheKey
+
+    k1 = CacheKey("pallas-systolic", "tpu_v5e", 512, 512, 512, "bfloat16")
+    k8 = CacheKey("pallas-systolic", "tpu_v5e", 512, 512, 512, "bfloat16", tp=8)
+    assert k1.encode() != k8.encode()
+    assert k1.encode().endswith("tp1") and k8.encode().endswith("tp8")
+
+
+def test_tp_tuned_block_clamps_to_shard_problem(tmp_path, monkeypatch):
+    """A tp-keyed cache hit whose geometry exceeds the per-shard ring-step
+    problem must clamp to it: reduce-scatter steps contract only K/tp, so a
+    cached bk up to K would pad the contraction tp-fold if served as-is."""
+    from repro.distributed.collective_matmul import _tp_tuned_block
+    from repro.tune import cache as tune_cache
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "plans.json"))
+    tune_cache.reset_default_cache()
+    key = tune_cache.CacheKey(
+        "pallas-systolic", "tpu_v5e", 2048, 1024, 4096, "bfloat16", tp=8
+    )
+    tune_cache.default_cache().store(
+        key, tune_cache.TunedPlan(256, 128, 4096, 1.0, 1.0, "stub")
+    )
+    # all-gather step (M/tp, N/tp, K): full-K contraction, bk survives
+    assert _tp_tuned_block(
+        2048, 1024, 4096, "bfloat16", 8, (256, 128, 4096)
+    ) == (256, 128, 4096)
+    # reduce-scatter step (M/tp, N, K/tp): bk clamps to K/tp = 512
+    assert _tp_tuned_block(
+        2048, 1024, 4096, "bfloat16", 8, (256, 1024, 512)
+    ) == (256, 128, 512)
+    tune_cache.reset_default_cache()
+
+
+def test_tensor_parallel_context_rejects_missing_axis():
+    from repro.distributed import collective_matmul as cm
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="no axis"):
+        with cm.tensor_parallel(mesh, axis="pod"):
+            pass
+    assert cm.current_tensor_parallel() is None
+    with cm.tensor_parallel(mesh):
+        assert cm.current_tensor_parallel() == (mesh, "model")
+    assert cm.current_tensor_parallel() is None
