@@ -12,6 +12,9 @@
   serve     continuous vs synchronized batching on one ragged Poisson trace:
             tokens/s, p50/p99 step latency, mean slot occupancy (the serving
             analogue of the paper's DSP-utilisation column); BENCH JSON lines
+  serve_long  long-prompt adversarial trace, monolithic vs chunked prefill:
+            p99 decode-tick latency must improve under chunking while
+            per-request outputs stay identical; BENCH JSON lines
   tp        tensor-parallel GEMM on a forced 8-device mesh: overlapped
             collective matmul vs gather-then-matmul vs single-device
             (subprocess -- the device-count flag must precede jax init);
@@ -42,6 +45,7 @@ def main() -> None:
         "roofline": roofline_report.run,
         "tune": tune_report.run,
         "serve": serve_throughput.run,
+        "serve_long": serve_throughput.run_longprompt,
         "tp": tp_matmul.run,
     }
     want = sys.argv[1:] or list(tables)

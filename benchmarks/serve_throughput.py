@@ -18,7 +18,18 @@ consumption.  Greedy decoding on the float32 smoke config keeps the outputs
 per-request identical across policies (asserted), so the comparison is pure
 scheduling.
 
-    PYTHONPATH=src python -m benchmarks.run serve
+``run_longprompt`` is the chunked-prefill tentpole measurement: the same
+long-prompt adversarial trace (short requests decoding steadily, one long
+prompt landing mid-stream) through monolithic vs chunked prefill.  The
+metric is **p99 decode-tick latency** -- the wall time a decoding request
+waits between its tokens, prefill work included: monolithic admission puts
+the whole prompt forward inside one decode tick, chunked at most one
+bounded chunk.  The improvement is asserted, and per-request outputs must
+stay bit-identical across the two modes (both are bit-exact to isolated
+generation).
+
+    PYTHONPATH=src python -m benchmarks.run serve        # policy comparison
+    PYTHONPATH=src python -m benchmarks.run serve_long   # chunked prefill p99
 """
 
 from __future__ import annotations
@@ -109,6 +120,95 @@ def run(
     return rows
 
 
+def run_longprompt(
+    arch: str = "internlm2-1.8b",
+    n_short: int = 2,
+    short_prompt: int = 8,
+    short_gen: int = 28,
+    long_prompt: int = 160,
+    chunk_size: int = 16,
+    seed: int = 0,
+) -> list[str]:
+    """Long-prompt adversarial trace: monolithic vs chunked prefill.
+
+    Asserts (a) per-request outputs are identical across the two prefill
+    modes and (b) p99 decode-tick latency improves under chunked prefill.
+    """
+    from repro.configs import get_smoke
+    from repro.data.synthetic import make_adversarial_trace
+    from repro.models.registry import get_model
+    from repro.serving import (
+        ContinuousScheduler,
+        ServeConfig,
+        ServeEngine,
+        requests_from_trace,
+    )
+
+    cfg = dataclasses.replace(get_smoke(arch), dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    trace = make_adversarial_trace(
+        cfg,
+        n_short=n_short,
+        short_prompt=short_prompt,
+        short_gen=short_gen,
+        long_prompt=long_prompt,
+        seed=seed,
+    )
+    prefix = cfg.n_patches if cfg.frontend == "vit" else 0
+    max_len = (
+        max(t["prompt"]["tokens"].shape[1] + t["max_new_tokens"] for t in trace)
+        + prefix
+    )
+
+    rows = [
+        "serve_longprompt.mode,p99_tick_ms,p50_tick_ms,prefill_chunks,"
+        "decode_steps,tok_per_s"
+    ]
+    outputs: dict[str, dict[int, np.ndarray]] = {}
+    summaries: dict[str, dict] = {}
+    for mode, chunked in (("monolithic", False), ("chunked", True)):
+        engine = ServeEngine(
+            model, params, ServeConfig(max_len=max_len, batch=n_short + 1)
+        )
+        sched = ContinuousScheduler(
+            engine, chunked_prefill=chunked, chunk_size=chunk_size
+        )
+        outputs[mode] = sched.run(requests_from_trace(trace))
+        s = sched.stats.summary()
+        s.update(
+            mode=mode,
+            arch=arch,
+            n_short=n_short,
+            long_prompt=long_prompt,
+            chunk_size=chunk_size if chunked else None,
+        )
+        summaries[mode] = s
+        rows.append(
+            f"{mode},{s['p99_tick_ms']},{s['p50_tick_ms']},"
+            f"{s['prefill_chunks']},{s['decode_steps']},{s['tok_per_s']}"
+        )
+        rows.append("BENCH " + json.dumps(s, sort_keys=True))
+
+    for rid, toks in outputs["monolithic"].items():
+        assert np.array_equal(toks, outputs["chunked"][rid]), (
+            f"request {rid} diverged between prefill modes"
+        )
+    p99_mono = summaries["monolithic"]["p99_tick_ms"]
+    p99_chunk = summaries["chunked"]["p99_tick_ms"]
+    assert p99_chunk < p99_mono, (
+        f"chunked prefill did not improve p99 decode-tick latency: "
+        f"{p99_chunk} ms vs {p99_mono} ms monolithic"
+    )
+    rows.append(
+        f"p99_tick_gain,chunked-vs-monolithic,"
+        f"{p99_mono - p99_chunk:+.3f}ms,OK,,"
+    )
+    return rows
+
+
 if __name__ == "__main__":
     for r in run():
+        print(r)
+    for r in run_longprompt():
         print(r)

@@ -49,17 +49,27 @@ class BlockPlan:
     # -- level-1 (VMEM) occupancy: the "fitter" check -----------------------
 
     def vmem_bytes(self) -> int:
-        """Working set of one grid step: A block + B block + accumulator.
+        """Working set of one grid step: A block + B block + accumulator + out.
 
-        Pallas double-buffers the input streams (the paper's overlapped
-        Read/Compute, Section V); the fp32 accumulator is single-buffered
-        scratch (C-stationary).
+        Audited against the kernel's actual buffers (kernels/systolic/
+        kernel.py): Pallas double-buffers the two *streamed* inputs (the
+        paper's overlapped Read/Compute, Section V) because their block
+        index advances every k step; the fp32 accumulator is single-buffered
+        VMEM scratch (C-stationary); and the output window is a single
+        buffer too -- its (i, j) index is constant across the whole
+        k-innermost sweep and it is written exactly once, on the final k
+        step.  Counting the output double-buffered (the old accounting)
+        overstated the working set by bm*bn*in_bytes and made ``fits_vmem``
+        reject feasible near-budget plans.  Should Mosaic revolve a second
+        out buffer to overlap the (i, j) copy-out with the next block, that
+        lives in the headroom ``Chip.vmem_budget_bytes`` already reserves
+        below physical VMEM (see core/hw.py).
         """
         mult = 2 if self.double_buffer else 1
         a_block = self.bm * self.bk * self.in_dtype_bytes * mult
         b_block = self.bk * self.bn * self.in_dtype_bytes * mult
         acc = self.bm * self.bn * self.acc_dtype_bytes
-        out = self.bm * self.bn * self.in_dtype_bytes * mult
+        out = self.bm * self.bn * self.in_dtype_bytes
         return a_block + b_block + acc + out
 
     def fits_vmem(self, chip: hw.Chip | str | None = None) -> bool:

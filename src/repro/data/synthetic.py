@@ -125,3 +125,47 @@ def make_request_trace(
             }
         )
     return trace
+
+
+def make_adversarial_trace(
+    cfg: ArchConfig,
+    *,
+    n_short: int,
+    short_prompt: int = 8,
+    short_gen: int = 24,
+    long_prompt: int = 96,
+    long_gen: int = 4,
+    long_arrival: float = 2.0,
+    seed: int = 0,
+) -> list[dict]:
+    """The long-prompt worst case for monolithic prefill.
+
+    ``n_short`` short requests arrive at tick 0 and decode steadily; one
+    request with a ``long_prompt``-token prompt arrives at ``long_arrival``
+    while they are mid-generation.  Under monolithic prefill its admission
+    stalls every decoding slot for a full prompt forward (one tick's latency
+    spikes by the whole prefill); under chunked prefill the prompt trickles
+    in one bounded chunk per tick and decode-tick latency stays flat --
+    the per-request tentpole metric of ``benchmarks/serve_throughput.
+    run_longprompt``.  Same entry layout as ``make_request_trace``.
+    """
+    if n_short < 1:
+        raise ValueError("n_short must be >= 1")
+    trace = [
+        {
+            "rid": i,
+            "arrival": 0.0,
+            "prompt": make_prompt(cfg, seq=short_prompt, seed=seed + 1 + i),
+            "max_new_tokens": short_gen,
+        }
+        for i in range(n_short)
+    ]
+    trace.append(
+        {
+            "rid": n_short,
+            "arrival": float(long_arrival),
+            "prompt": make_prompt(cfg, seq=long_prompt, seed=seed + 101),
+            "max_new_tokens": long_gen,
+        }
+    )
+    return trace

@@ -9,10 +9,7 @@ import jax.numpy as jnp
 
 from repro.kernels.attention import kernel as _kernel
 from repro.core.blocking import round_up as _round_up
-
-
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels._compat import auto_interpret as _auto_interpret
 
 
 @functools.partial(

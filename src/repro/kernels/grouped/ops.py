@@ -9,11 +9,8 @@ import jax.numpy as jnp
 
 from repro.core import hw
 from repro.core.blocking import round_up as _round_up
+from repro.kernels._compat import auto_interpret as _auto_interpret
 from repro.kernels.grouped import kernel as _kernel
-
-
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _tuned_block(c: int, n: int, k: int, dtype, chip) -> tuple[int, int, int] | None:

@@ -598,6 +598,71 @@ def gqa_decode(
     return y, {"k": ck, "v": cv, "pos": cpos}
 
 
+def gqa_prefill_chunk(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    cache: dict,
+    offset: jax.Array,
+    *,
+    wrapped: bool = False,
+):
+    """Prefill one chunk of a prompt against a partially primed cache.
+
+    x: (B, L, d) hidden states of absolute prompt positions
+    [offset, offset+L); cache rows for positions < offset are already
+    primed; ``offset`` is a (traced) int32 scalar, so every chunk of a given
+    length shares one compile.  The chunk's K/V land at their absolute
+    positions (ring slots ``pos % size`` -- the same rule decode uses) and
+    the chunk's queries attend under the existing validity rule
+    ``valid(k) = pos[k] >= 0 and pos[k] <= q_pos [and window]``; there is no
+    new masking math.
+
+    ``wrapped`` (static) picks the key source.  False -- guaranteed whenever
+    offset+L fits the cache, i.e. always for full GQA/MLA caches -- writes
+    the chunk first and attends over the cache, which keeps the valid keys a
+    position-ordered prefix with a masked suffix: the layout under which the
+    chunk rows are bit-identical to the monolithic prefill rows (DESIGN.md
+    §8).  True (an SWA ring chunk past the window) attends over
+    [pre-write cache ‖ chunk] instead, so within-chunk queries still see the
+    ring entries the chunk itself overwrites; mathematically the same
+    sliding-window attention, but with ring-ordered keys the fp reduction
+    order differs, so no bit guarantee past the window.
+    """
+    b, l, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = ops.matmul(x, params["wq"].astype(x.dtype)).reshape(b, l, cfg.n_heads, hd)
+    k = ops.matmul(x, params["wk"].astype(x.dtype)).reshape(b, l, cfg.n_kv_heads, hd)
+    v = ops.matmul(x, params["wv"].astype(x.dtype)).reshape(b, l, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    positions = jnp.asarray(offset, jnp.int32) + jnp.arange(l, dtype=jnp.int32)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot_of = positions % size
+    posb = jnp.broadcast_to(positions[None], (b, l))
+    if wrapped:
+        keys = jnp.concatenate([cache["k"], k], axis=1)
+        vals = jnp.concatenate([cache["v"], v], axis=1)
+        kpos = jnp.concatenate([cache["pos"], posb], axis=1)
+    ck = cache["k"].at[:, slot_of].set(k)
+    cv = cache["v"].at[:, slot_of].set(v)
+    cpos = cache["pos"].at[:, slot_of].set(posb)
+    if not wrapped:
+        keys, vals, kpos = ck, cv, cpos
+
+    window = cfg.window if cfg.attention == "swa" else None
+    valid = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= posb[:, :, None])
+    if window is not None:
+        valid &= kpos[:, None, :] > (posb - window)[:, :, None]
+    o = _sdpa(q, keys, vals, valid, cfg.q_per_kv)  # (B, L, Hq, hd)
+    y = ops.matmul(o.reshape(b, l, -1), params["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
 # ---------------------------------------------------------------------------
 # MLA (Multi-head Latent Attention)
 # ---------------------------------------------------------------------------
@@ -739,5 +804,66 @@ def mla_decode(
     w = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhst,btl->bshl", w.astype(ck.dtype), ck)  # latent ctx
     o = jnp.einsum("bshl,lhd->bshd", ctx, w_uv).reshape(b, 1, -1)
+    y = ops.matmul(o, params["wo"].astype(x.dtype))
+    return y, {"c_kv": ck, "k_rope": cr, "pos": cpos}
+
+
+def mla_prefill_chunk(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    cache: dict,
+    offset: jax.Array,
+    *,
+    wrapped: bool = False,
+):
+    """Prefill one chunk against a partially primed MLA latent cache.
+
+    Same contract as ``gqa_prefill_chunk`` (x covers absolute positions
+    [offset, offset+L); chunk latents land at their absolute slots; the
+    pos-validity rule masks the rest).  Attention runs in the *expanded*
+    formulation of ``mla_fwd`` -- W_kv_b applied to the cached latents, the
+    same einsum path the monolithic prefill lowers -- so chunk rows stay
+    bit-identical to monolithic prefill rows (the cache is full-length,
+    valid keys are always a position-ordered prefix; ``wrapped`` never
+    applies and is accepted only for signature parity).
+    """
+    del wrapped  # MLA caches are full-length: offset+L <= size always
+    m = cfg.mla
+    b, l, _ = x.shape
+    h = cfg.n_heads
+    positions = jnp.asarray(offset, jnp.int32) + jnp.arange(l, dtype=jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, x, cfg, positions)
+
+    off = jnp.asarray(offset, jnp.int32)
+    posb = jnp.broadcast_to(positions[None], (b, l))
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv_new, off, axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new, off, axis=1
+    )
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], posb, off, axis=1)
+
+    # Expand the latents exactly as mla_fwd does (rows are independent, so
+    # previously primed rows reproduce the monolithic values bit-for-bit;
+    # masked rows beyond the primed prefix are zeros and cost nothing).
+    t = ck.shape[1]
+    kv = ops.matmul(ck, params["wkv_b"].astype(x.dtype)).reshape(
+        b, t, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim :]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(cr[:, :, None], (b, t, h, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = jnp.einsum(
+        "bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = constrain_pref(scores, 0, (1, 2))
+    valid = (cpos[:, None, :] >= 0) & (cpos[:, None, :] <= posb[:, :, None])
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v).reshape(b, l, -1)
     y = ops.matmul(o, params["wo"].astype(x.dtype))
     return y, {"c_kv": ck, "k_rope": cr, "pos": cpos}

@@ -22,6 +22,8 @@ the paper's kernel with an expert grid dimension (see kernels/grouped).
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -49,8 +51,13 @@ def init_moe(key, cfg: ArchConfig) -> dict:
 
 
 def capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    """Per-expert slot budget: ceil(T*k/E * cf), rounded up to a lane-friendly
+    multiple of 8.  The budget must be *ceiled* before the round-up: flooring
+    first (the old ``int()``) could land exactly on a multiple of 8 below the
+    true budget (e.g. 16.5 -> 16 -> round_up -> 16) and silently drop tokens
+    even at capacity_factor >= 1.0 with a perfectly balanced router."""
     m = cfg.moe
-    c = int(tokens_per_group * m.top_k / m.n_experts * m.capacity_factor)
+    c = math.ceil(tokens_per_group * m.top_k / m.n_experts * m.capacity_factor)
     return max(8, _round_up(c, 8))
 
 

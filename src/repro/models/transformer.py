@@ -106,6 +106,28 @@ def attn_block_decode(p: dict, x: jax.Array, cfg: ArchConfig, cache, pos):
     return x + f, nc
 
 
+def attn_block_prefill_chunk(
+    p: dict, x: jax.Array, cfg: ArchConfig, cache, offset, *, wrapped: bool = False
+):
+    """One layer of a chunked prefill: like ``attn_block_fwd`` but the
+    attention reads/writes a partially primed decode cache at ``offset``
+    (see ``attention.gqa_prefill_chunk``); MoE/SwiGLU FFN as in decode."""
+    xin = layers.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, nc = attn.mla_prefill_chunk(p["attn"], xin, cfg, cache, offset)
+    else:
+        a, nc = attn.gqa_prefill_chunk(
+            p["attn"], xin, cfg, cache, offset, wrapped=wrapped
+        )
+    x = x + a
+    hin = layers.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        f, _ = moe.moe_fwd(p["ffn"], hin, cfg)
+    else:
+        f = layers.swiglu(p["ffn"], hin)
+    return x + f, nc
+
+
 def init_attn_block_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
     if cfg.attention == "mla":
         return attn.init_mla_cache(cfg, batch, max_len, dtype)
@@ -570,5 +592,80 @@ def prefill(params, batch: dict, cfg: ArchConfig, max_len: int):
 
     (cache, logits), _ = jax.lax.scan(
         step, (cache, logits0), jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    )
+    return logits, cache
+
+
+# ===========================================================================
+# Chunked prefill (serving: incremental prefill over a primed decode cache)
+# ===========================================================================
+
+
+def prefill_chunk(
+    params,
+    batch: dict,
+    cfg: ArchConfig,
+    cache: dict,
+    offset,
+    *,
+    wrapped: bool = False,
+):
+    """Advance a prefill by one chunk.  -> (last-position logits, cache).
+
+    batch: {"tokens": (B, L[, ncb])} covering absolute prompt positions
+    [offset, offset+L); ``cache`` is a decode cache (``init_cache``) whose
+    rows below ``offset`` were primed by earlier chunks (a fresh cache at
+    offset 0); ``offset`` is a traced int32 scalar, so all chunks of one
+    length share a compile.  Composing ``prefill_chunk`` over a split of
+    the prompt is equivalent to one ``prefill`` call: attention families
+    write each chunk's K/V at its absolute cache position and attend under
+    the decode masking rule (bit-identical rows on suffix-masked backends,
+    see DESIGN.md §8); sequential families (ssm/hybrid) scan
+    ``decode_step`` from the carried state -- literally a truncated prefill
+    scan, exact by construction.  ``wrapped`` (static) must be set when an
+    SWA ring chunk extends past the window (``offset+L > cache size``).
+
+    The vit frontend is not chunkable (its patch prefix is glued to the
+    first text positions); serving falls back to monolithic prefill there.
+    """
+    if cfg.frontend == "vit":
+        raise ValueError("chunked prefill does not support the vit frontend")
+    dt = _cdtype(cfg)
+    tokens = batch["tokens"]
+    b, l = tokens.shape[0], tokens.shape[1]
+    offset = jnp.asarray(offset, jnp.int32)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if cfg.frontend == "audio_codec":
+            x = frontends.audio_embed(params["embed"], tokens, dt)
+        else:
+            x = layers.embed(params["embed"], tokens, dt)
+
+        def body(h, lpc):
+            lp, lc = lpc
+            h, nc = attn_block_prefill_chunk(
+                lp, h, cfg, lc, offset, wrapped=wrapped
+            )
+            return h, nc
+
+        x, new_layers = _scan(body, x, (params["layers"], cache["layers"]))
+        x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        return _head(params, x, cfg), {"layers": new_layers}
+
+    # Sequential families: a chunk is a truncated prefill scan from the
+    # carried state (same decode_step sequence as monolithic prefill).
+    if cfg.frontend == "audio_codec":
+        logits0 = jnp.zeros((b, 1, cfg.n_codebooks, cfg.vocab_size), jnp.float32)
+    else:
+        logits0 = jnp.zeros((b, 1, cfg.vocab_size), jnp.float32)
+
+    def step(carry, si):
+        c, _ = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, si, 1, axis=1)
+        logits, c = decode_step(params, tok, cfg, c, offset + si)
+        return (c, logits), None
+
+    (cache, logits), _ = jax.lax.scan(
+        step, (cache, logits0), jnp.arange(l, dtype=jnp.int32)
     )
     return logits, cache

@@ -4,6 +4,7 @@ continuous-batching request scheduler."""
 from repro.serving.engine import (  # noqa: F401
     ServeConfig,
     ServeEngine,
+    chunk_schedule,
     consult_decode_plans,
     decode_gemm_problems,
 )

@@ -12,9 +12,12 @@ serving modes share those compiled functions:
     ``repro.serving.kvpool``): the decode step takes a per-slot position
     *vector*, so slots sitting at different depths advance in one step.  The
     engine contributes ``prefill_request`` (batch-1 prefill that does NOT
-    touch the resident synchronized cache) and ``decode_slots`` (vector-pos
-    decode over an externally owned cache pytree); request lifecycle and KV
-    row management live in the scheduler/pool.
+    touch the resident synchronized cache), ``prefill_chunk`` (advance one
+    request's prefill by one bucketed chunk at its absolute offset -- the
+    primitive behind the scheduler's mixed prefill/decode steps, DESIGN.md
+    §8.1), and ``decode_slots`` (vector-pos decode over an externally owned
+    cache pytree); request lifecycle and KV row management live in the
+    scheduler/pool.
 
 Empty or cleared slots are marked ``pos = -1`` everywhere; the attention
 masking rule ``valid(k) = pos[k] >= 0`` then blanks their cache rows, so a
@@ -47,6 +50,36 @@ class ServeConfig:
     batch: int  # synchronized batch size == continuous-batching slot count
     temperature: float = 0.0  # 0 => greedy
     seed: int = 0
+
+
+def chunk_schedule(n_tokens: int, chunk: int) -> list[tuple[int, int]]:
+    """Split a prompt into schedulable prefill chunks: [(offset, length), ...].
+
+    The bucketing rule that keeps chunk shapes cacheable (one jit compile
+    and one ``repro.tune`` plan-cache row per shape, DESIGN.md §8): as many
+    full ``chunk``-length pieces as fit, then the remainder split greedily
+    into power-of-two buckets.  Distinct lengths are therefore bounded by
+    log2(chunk) + 2 regardless of the prompt-length distribution -- the
+    serving analogue of padding GEMMs to block multiples, except nothing is
+    padded (a padded tail would write phantom positions into the KV slot).
+    """
+    if n_tokens < 1:
+        raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    out, off = [], 0
+    while n_tokens - off >= chunk:
+        out.append((off, chunk))
+        off += chunk
+    rem = n_tokens - off
+    bucket = 1 << (chunk.bit_length() - 1)  # largest power of two <= chunk
+    while rem:
+        while bucket > rem:
+            bucket >>= 1
+        out.append((off, bucket))
+        off += bucket
+        rem -= bucket
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +183,13 @@ class ServeEngine:
         )
         self._decode = jax.jit(
             lambda p, t, c, pos: model.decode_step(p, t, cache=c, pos=pos),
+            donate_argnums=(2,),
+        )
+        self._chunk = jax.jit(
+            lambda p, t, c, off, wrapped: model.prefill_chunk(
+                p, {"tokens": t}, cache=c, offset=off, wrapped=wrapped
+            ),
+            static_argnums=(4,),
             donate_argnums=(2,),
         )
         self._key = jax.random.PRNGKey(scfg.seed)
@@ -259,6 +299,56 @@ class ServeEngine:
         with self._mesh_scope():
             logits, cache = self._prefill(self.params, batch)
         return self._sample(logits), cache
+
+    # -- chunked prefill -------------------------------------------------------
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Every family except the vit frontend (its patch prefix is glued
+        to the first text positions); the scheduler falls back to monolithic
+        ``prefill_request`` when False."""
+        return self.cfg.frontend != "vit"
+
+    @property
+    def chunk_prefill_staged(self) -> bool:
+        """True when mid-prefill chunks must carry a request-private staging
+        cache instead of round-tripping through the KV pool.  Attention
+        caches are safe in the pool mid-prefill -- the ``pos`` validity rule
+        leaves a masked slot's rows bit-for-bit untouched under co-scheduled
+        decode steps -- but SSM/hybrid *state* leaves have no such mask (a
+        decode step advances every batch row unconditionally), so their
+        chunks accumulate privately and the slot is written once, on the
+        final chunk, exactly like the monolithic contract."""
+        return self.cfg.family in ("ssm", "hybrid")
+
+    def attn_cache_len(self) -> int:
+        """Sequence capacity of the per-layer attention cache: ``max_len``,
+        except the SWA ring which only keeps ``window`` slots."""
+        if self.cfg.attention == "swa":
+            return min(self.scfg.max_len, self.cfg.window)
+        return self.scfg.max_len
+
+    def prefill_chunk(self, tokens, cache_one, offset: int, *, last: bool):
+        """Advance one request's prefill by one chunk.
+
+        tokens: (1, L[, ncb]) slice of the prompt at absolute offset
+        ``offset``; cache_one: the request's batch-1 slot view (donated).
+        Returns (first sampled token (1, 1[, ncb]) when ``last`` else None,
+        advanced cache).  ``offset`` is traced, so chunks of one (bucketed)
+        length share a compile; the SWA ring-wrap variant is a separate
+        static compile (see ``attention.gqa_prefill_chunk``).
+        """
+        length = tokens.shape[1]
+        wrapped = offset + length > self.attn_cache_len()
+        with self._mesh_scope():
+            logits, cache_one = self._chunk(
+                self.params,
+                jnp.asarray(tokens),
+                cache_one,
+                jnp.int32(offset),
+                wrapped,
+            )
+        return (self._sample(logits) if last else None), cache_one
 
     def decode_slots(self, tokens: jax.Array, cache: Any, pos: jax.Array):
         """One continuous-batching decode step over an external cache.

@@ -18,6 +18,12 @@ Host-side, ``positions[slot]`` mirrors the device state: the next absolute
 position the slot will write (prompt length right after admission, +1 per
 decoded token), or -1 while free.  That vector, as ``pos_vector()``, is
 exactly the per-slot position argument of the vector-``pos`` decode step.
+
+Chunked prefill round-trips a slot through ``gather_slot`` (batch-1 view)
+and ``write_slot`` (scatter back; ``next_pos=None`` mid-prefill): chunk K/V
+rows land in the pool at their absolute offsets while ``positions[slot]``
+stays -1, so a partially prefilled slot is invisible to decode steps under
+the same masking rule that protects freed slots.
 """
 
 from __future__ import annotations
@@ -39,6 +45,15 @@ def _scatter_slot(pool: Any, one: Any, slot: jax.Array) -> Any:
         ),
         pool,
         one,
+    )
+
+
+@jax.jit
+def _gather_slot(pool: Any, slot: jax.Array) -> Any:
+    """Batch-1 copy of slot ``slot`` from the pooled cache (not donated --
+    the pool stays live while the copy is advanced by a prefill chunk)."""
+    return jax.tree.map(
+        lambda p: jax.lax.dynamic_slice_in_dim(p, slot, 1, axis=1), pool
     )
 
 
@@ -123,11 +138,34 @@ class KVPool:
         """Scatter a batch-1 primed cache (from ``model.prefill`` at this
         pool's max_len) into ``slot``; its next write position becomes
         ``n_tokens`` (prompt length incl. any non-text prefix)."""
+        self.write_slot(slot, cache_one, next_pos=n_tokens)
+
+    # -- chunked prefill: offset writes into one slot -------------------------
+
+    def gather_slot(self, slot: int) -> Any:
+        """Batch-1 view (copy) of ``slot`` -- the working cache a prefill
+        chunk advances before ``write_slot`` puts it back."""
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"gather of invalid slot {slot}")
+        return _gather_slot(self.cache, jnp.int32(slot))
+
+    def write_slot(self, slot: int, cache_one: Any, next_pos: int | None) -> None:
+        """Scatter a batch-1 cache back into ``slot``.
+
+        ``next_pos`` set marks the slot live at that absolute position (end
+        of prefill: the prompt length).  ``next_pos=None`` keeps the
+        host-side position at -1 -- the mid-prefill state: the chunk's K/V
+        rows are physically in the pool at their absolute offsets, but the
+        decode step still sees the slot as empty (its query position is -1,
+        every key masked, cache row untouched), so partially prefilled
+        requests never contaminate co-scheduled decode steps.
+        """
         shapes = jax.tree.map(lambda a: a.shape[1], cache_one)
         if any(s != 1 for s in jax.tree.leaves(shapes)):
-            raise ValueError("write_prefill expects a batch-1 cache")
+            raise ValueError("write_slot expects a batch-1 cache")
         self.cache = _scatter_slot(self.cache, cache_one, jnp.int32(slot))
-        self.positions[slot] = n_tokens
+        if next_pos is not None:
+            self.positions[slot] = next_pos
 
     # -- decode-step interface ----------------------------------------------
 

@@ -3,9 +3,9 @@
 Request lifecycle (one state machine per request)::
 
     QUEUED ──admission──> PREFILLING ──KV scatter──> DECODING ──EOS /
-      │   (free slot and    (batch-1 exact-length     │  max_new_tokens
-      │    arrival <= now)   prefill)                 │
-      submit()                                        └──> FINISHED (slot freed)
+      │   (free slot and    (monolithic, or one      │  max_new_tokens
+      │    arrival <= now)   chunk per tick)         │
+      submit()                                       └──> FINISHED (slot freed)
 
 Admission policies:
 
@@ -21,10 +21,23 @@ Admission policies:
 
 The scheduler advances in virtual *ticks*: one batched decode step per tick,
 request arrival times measured in ticks (Poisson in the synthetic traces).
-Prefill is batch-1 and exact-length and decode is the vector-``pos`` step, so
-per-request outputs under continuous batching are bit-identical to running
-each request alone through ``ServeEngine.generate`` (tests/test_continuous.py
-asserts this for GQA, SWA, and MLA caches).
+
+**Chunked prefill** (``chunked_prefill=True``) is the paper's
+overlap-data-movement-with-compute argument applied at the request level: a
+monolithic prefill stalls every decoding slot for a whole prompt forward,
+exactly the pipeline bubble Section V engineers away.  Instead each admitted
+prompt is split by ``engine.chunk_schedule`` into bucketed fixed-size chunks
+and the PREFILLING state carries *progress*: every tick runs at most
+``chunk_budget`` prefill chunks (default 1) and then the regular vector-pos
+decode step, so decode latency stays flat while long prompts trickle in.
+Mid-prefill slots stay ``pos = -1`` in the pool -- masked out of the
+co-scheduled decode steps by the standard validity rule -- until their final
+chunk lands.
+
+Either way, per-request outputs are bit-identical to running each request
+alone through ``ServeEngine.generate`` (tests/test_continuous.py and
+tests/test_chunked_prefill.py assert this for GQA, SWA, and MLA caches,
+greedy float32, default einsum attention).
 """
 
 from __future__ import annotations
@@ -38,7 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import ServeEngine, chunk_schedule
 from repro.serving.kvpool import KVPool
 
 QUEUED = "queued"
@@ -64,6 +77,11 @@ class Request:
     admitted_tick: int = -1
     finished_tick: int = -1
     first_token_s: float = -1.0  # wall seconds from run start to first token
+    # chunked prefill progress: the (offset, length) schedule and how many
+    # chunks have landed in the KV slot so far (PREFILLING-with-progress)
+    chunks: list = dataclasses.field(default_factory=list)
+    chunk_idx: int = 0
+    staging: Any = None  # private mid-prefill cache (SSM/hybrid families)
 
     @property
     def prompt_len(self) -> int:
@@ -98,21 +116,40 @@ class SchedulerStats:
     tokens_out: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    prefill_chunks: int = 0
     occupancy_sum: float = 0.0  # fraction of slots active, summed over decode steps
     step_latency_s: list = dataclasses.field(default_factory=list)
+    # Wall time of whole ticks in which >= 1 slot decoded: what a decoding
+    # request actually waits between its tokens, *including* any prefill
+    # work co-scheduled (chunked) or serialized (monolithic) into the tick.
+    # This is the metric the chunked-prefill tentpole improves: a monolithic
+    # long-prompt admission lands its entire prompt forward inside one such
+    # tick, a chunked one at most chunk_budget bounded chunks.
+    tick_latency_s: list = dataclasses.field(default_factory=list)
 
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / self.decode_steps if self.decode_steps else 0.0
 
-    def latency_percentiles(self) -> tuple[float, float]:
-        """(p50, p99) per-token decode-step latency in seconds."""
-        if not self.step_latency_s:
+    @staticmethod
+    def _percentiles(lat: list) -> tuple[float, float]:
+        if not lat:
             return 0.0, 0.0
-        lat = np.asarray(self.step_latency_s)
-        return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+        arr = np.asarray(lat)
+        return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+
+    def latency_percentiles(self) -> tuple[float, float]:
+        """(p50, p99) bare decode-step latency in seconds (the jitted step
+        only; see ``tick_latency_s`` for what requests experience)."""
+        return self._percentiles(self.step_latency_s)
+
+    def tick_percentiles(self) -> tuple[float, float]:
+        """(p50, p99) decode-tick latency in seconds (decode step + any
+        prefill work sharing the tick)."""
+        return self._percentiles(self.tick_latency_s)
 
     def summary(self) -> dict:
         p50, p99 = self.latency_percentiles()
+        tp50, tp99 = self.tick_percentiles()
         wall = self.prefill_s + self.decode_s
         return {
             "ticks": self.ticks,
@@ -121,9 +158,12 @@ class SchedulerStats:
             "tokens_out": self.tokens_out,
             "prefill_s": round(self.prefill_s, 4),
             "decode_s": round(self.decode_s, 4),
+            "prefill_chunks": self.prefill_chunks,
             "tok_per_s": round(self.tokens_out / wall, 2) if wall > 0 else 0.0,
             "p50_step_ms": round(p50 * 1e3, 3),
             "p99_step_ms": round(p99 * 1e3, 3),
+            "p50_tick_ms": round(tp50 * 1e3, 3),
+            "p99_tick_ms": round(tp99 * 1e3, 3),
             "mean_occupancy": round(self.mean_occupancy(), 4),
         }
 
@@ -139,11 +179,32 @@ class ContinuousScheduler:
         *,
         policy: str = "continuous",
         dtype=None,
+        chunked_prefill: bool = False,
+        chunk_size: int = 128,
+        chunk_budget: int = 1,
+        precompile: bool = True,
     ):
         if policy not in self.POLICIES:
             raise ValueError(f"policy must be one of {self.POLICIES}, got {policy!r}")
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if chunk_budget < 1:
+            raise ValueError(f"chunk_budget must be >= 1, got {chunk_budget}")
+        if chunked_prefill and not engine.supports_chunked_prefill:
+            import warnings
+
+            warnings.warn(
+                f"{engine.cfg.name}: frontend {engine.cfg.frontend!r} is not "
+                "chunkable; falling back to monolithic prefill"
+            )
+            chunked_prefill = False
         self.engine = engine
         self.policy = policy
+        self.chunked_prefill = chunked_prefill
+        # A chunk longer than the SWA ring would write one slot twice.
+        self.chunk_size = min(chunk_size, engine.attn_cache_len())
+        self.chunk_budget = chunk_budget
+        self.precompile = precompile
         self.pool = KVPool(
             engine.model, engine.scfg.batch, engine.scfg.max_len, dtype
         )
@@ -153,6 +214,7 @@ class ContinuousScheduler:
             tok_shape += (cfg.n_codebooks,)
         self._slot_tok = np.zeros(tok_shape, np.int32)
         self._slot_req: dict[int, Request] = {}
+        self._prefilling: collections.deque[Request] = collections.deque()
         self.queue: collections.deque[Request] = collections.deque()
         self.tick = 0
         self.stats = SchedulerStats()
@@ -215,6 +277,14 @@ class ContinuousScheduler:
             req.state = PREFILLING
             req.slot = slot
             req.admitted_tick = self.tick
+            if self.chunked_prefill:
+                # PREFILLING-with-progress: the slot is claimed (pos = -1,
+                # masked out of decode) and the prompt trickles in one
+                # bucketed chunk per tick via _prefill_chunk_once.
+                req.chunks = chunk_schedule(req.prompt_len, self.chunk_size)
+                req.chunk_idx = 0
+                self._prefilling.append(req)
+                continue
             t0 = time.perf_counter()
             first, cache_one = self.engine.prefill_request(req.prompt)
             first = jax.block_until_ready(first)
@@ -223,17 +293,72 @@ class ContinuousScheduler:
             )
             self.stats.prefill_s += time.perf_counter() - t0
             tok = np.asarray(first)[0]  # (1,) or (1, ncb)
-            self._slot_tok[slot] = tok
-            self._slot_req[slot] = req
-            req.state = DECODING
-            if self._token_done(req, tok[0]):
-                self._finish(req)
+            self._start_decoding(req, tok)
 
-    def _decode_once(self) -> None:
+    def _start_decoding(self, req: Request, tok: np.ndarray) -> None:
+        """Prefill complete: seed the slot's token and flip to DECODING."""
+        self._slot_tok[req.slot] = tok
+        self._slot_req[req.slot] = req
+        req.state = DECODING
+        if self._token_done(req, tok[0]):
+            self._finish(req)
+
+    def _prefill_chunk_once(self) -> None:
+        """Run up to ``chunk_budget`` prefill chunks (FIFO over PREFILLING
+        requests), each written into the request's KV slot at its absolute
+        offset.  The final chunk emits the prompt's last-position logits and
+        promotes the request to DECODING."""
+        staged = self.engine.chunk_prefill_staged
+        budget = self.chunk_budget
+        while budget > 0 and self._prefilling:
+            req = self._prefilling[0]
+            off, length = req.chunks[req.chunk_idx]
+            last = req.chunk_idx == len(req.chunks) - 1
+            t0 = time.perf_counter()
+            tokens = req.prompt["tokens"][:, off : off + length]
+            # The working batch-1 cache is carried across chunks on the
+            # request (one gather at the first chunk, not one per chunk);
+            # co-scheduled decode steps cannot touch a pos=-1 slot's rows,
+            # so the carried view never goes stale.
+            if req.chunk_idx:
+                cache_one = req.staging
+            elif staged:
+                cache_one = self.pool.model.init_cache(
+                    1, self.pool.max_len, self.pool.dtype
+                )
+            else:
+                cache_one = self.pool.gather_slot(req.slot)
+            tok, cache_one = self.engine.prefill_chunk(
+                tokens, cache_one, off, last=last
+            )
+            jax.block_until_ready(tok if last else jax.tree.leaves(cache_one)[0])
+            if staged and not last:
+                req.staging = cache_one
+            else:
+                # Attention families scatter every chunk, so the pool holds
+                # the chunk's K/V at its absolute offset as soon as it
+                # lands; staged families write once, on the final chunk.
+                next_pos = (
+                    self.engine.prompt_positions(req.prompt) if last else None
+                )
+                self.pool.write_slot(req.slot, cache_one, next_pos)
+                req.staging = None if last else cache_one
+            self.stats.prefill_s += time.perf_counter() - t0
+            self.stats.prefill_chunks += 1
+            req.chunk_idx += 1
+            budget -= 1
+            if last:
+                req.staging = None
+                self._prefilling.popleft()
+                self._start_decoding(req, np.asarray(tok)[0])
+
+    def _decode_once(self) -> bool:
+        """One vector-pos decode step; False when no slot was decoding
+        (idle accounting lives in ``step``, which knows whether the tick
+        did prefill-chunk work instead)."""
         active = sorted(self._slot_req)
         if not active:
-            self.stats.idle_ticks += 1
-            return
+            return False
         t0 = time.perf_counter()
         nxt, self.pool.cache = self.engine.decode_slots(
             jnp.asarray(self._slot_tok), self.pool.cache, self.pool.pos_vector()
@@ -252,32 +377,96 @@ class ContinuousScheduler:
             self._slot_tok[slot] = tok
             if self._token_done(req, tok[0]):
                 self._finish(req)
+        return True
 
     # -- driving ---------------------------------------------------------------
 
     def warmup(self) -> None:
-        """Absorb the decode-step compile outside the stats window.
+        """Absorb one-off compiles outside the stats window.
 
-        Runs one vector-pos decode with every slot marked empty (pos = -1):
-        same trace signature as a live step, and -- because empty slots leave
-        their cache rows bit-for-bit untouched -- a no-op on pool state.  The
-        per-prompt-length prefill compiles still land in ``prefill_s`` (they
-        are a real serving cost), but step latencies and tok/s no longer
-        include the one-off decode compile.
+        Always runs one vector-pos decode with every slot marked empty
+        (pos = -1): same trace signature as a live step, and -- because
+        empty slots leave their cache rows bit-for-bit untouched -- a no-op
+        on pool state.  When ``precompile`` (default), additionally compiles
+        the per-shape prefill work for everything already queued -- the
+        bucketed chunk shapes under chunked prefill, the exact prompt shapes
+        under monolithic -- each run against a throwaway slot view and
+        discarded, so the measured tick latencies compare *scheduling*
+        policies rather than whose compiles happened to land in-window.
+        (Before the mixed-step model, prefill compiles were charged to
+        ``prefill_s``; with prefill sharing decode ticks they would dominate
+        the very p99 the chunking exists to bound.)
         """
+        key_before = self.engine._key  # warmup must not advance sampling
         tok = jnp.asarray(np.zeros_like(self._slot_tok))
         pos = jnp.full((self.pool.n_slots,), -1, jnp.int32)
         out, self.pool.cache = self.engine.decode_slots(tok, self.pool.cache, pos)
         jax.block_until_ready(out)
+        self.engine._key = key_before
+        # Absorb the pool-op compiles (slot gather/scatter, slot clearing)
+        # with bit-exact no-ops: round-trip slot 0 through gather+scatter and
+        # clear an empty slot mask.  Without this their first real use (first
+        # chunk / first admission / first eviction) lands mid-window and
+        # shows up as a phantom latency spike.
+        from repro.serving.kvpool import clear_slots
+
+        self.pool.write_slot(0, self.pool.gather_slot(0), next_pos=None)
+        self.pool.cache = clear_slots(
+            self.pool.cache,
+            jnp.zeros((self.pool.n_slots,), bool),
+            self.pool.n_slots,
+        )
+        if not self.precompile:
+            return
+        if not self.chunked_prefill:
+            seen: set = set()
+            for req in self.queue:
+                key = tuple(
+                    (k, tuple(v.shape)) for k, v in sorted(req.prompt.items())
+                )
+                if key in seen:
+                    continue
+                seen.add(key)
+                first, _ = self.engine.prefill_request(req.prompt)
+                jax.block_until_ready(first)
+            self.engine._key = key_before
+            return
+        tok_tail = self._slot_tok.shape[2:]  # (ncb,) for codec frontends
+        compiled: set = set()
+        for req in self.queue:
+            for off, length in chunk_schedule(req.prompt_len, self.chunk_size):
+                wrapped = off + length > self.engine.attn_cache_len()
+                if (length, wrapped) in compiled:
+                    continue
+                compiled.add((length, wrapped))
+                dummy = jnp.zeros((1, length) + tok_tail, jnp.int32)
+                view = self.pool.gather_slot(0)
+                _, view = self.engine.prefill_chunk(dummy, view, off, last=False)
+                jax.block_until_ready(jax.tree.leaves(view)[0])
 
     def pending(self) -> bool:
-        return bool(self.queue or self._slot_req)
+        return bool(self.queue or self._prefilling or self._slot_req)
 
     def step(self) -> bool:
-        """One scheduler tick: admit arrived requests, then one batched
-        decode step over whatever is in flight.  Returns ``pending()``."""
+        """One scheduler tick: admit arrived requests, run at most
+        ``chunk_budget`` prefill chunks (chunked mode), then one batched
+        decode step over whatever is decoding.  Returns ``pending()``.
+
+        Ticks in which at least one slot decoded are timed end to end into
+        ``stats.tick_latency_s`` -- the latency a decoding request actually
+        experiences, prefill work included.
+        """
+        t0 = time.perf_counter()
         self._admit()
-        self._decode_once()
+        chunks_before = self.stats.prefill_chunks
+        if self.chunked_prefill:
+            self._prefill_chunk_once()
+        decoded = self._decode_once()
+        if decoded:
+            self.stats.tick_latency_s.append(time.perf_counter() - t0)
+        elif self.stats.prefill_chunks == chunks_before:
+            # truly idle: no decode ran AND no prefill chunk landed
+            self.stats.idle_ticks += 1
         self.tick += 1
         self.stats.ticks += 1
         return self.pending()

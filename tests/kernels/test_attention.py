@@ -25,6 +25,11 @@ def _qkv(bh, sq, skv, d, dtype=jnp.float32, seed=0):
     (256, 256, True, 64),      # sliding window
     (100, 200, True, None),    # padding path
     (128, 128, True, 32),      # window smaller than block
+    (100, 100, True, 48),      # SWA + bq/bkv-non-divisible lengths: the
+                               # padded-KV tail must stay masked while the
+                               # window mask trims the other side
+    (190, 190, True, 64),      # SWA + padding, window crosses block edges
+    (130, 230, True, 32),      # SWA + non-divisible + longer KV stream
 ])
 def test_flash_vs_ref(sq, skv, causal, window):
     q, k, v = _qkv(2, sq, skv, 64)
@@ -63,6 +68,8 @@ def test_flash_dtypes(dtype):
     (100, 100, None, 32, 64),   # padding
     (128, 128, 48, 32, 32),     # window
     (96, 96, None, 96, 96),     # single block
+    (100, 100, 48, 32, 64),     # SWA + non-divisible lengths (padded KV)
+    (90, 170, 40, 64, 64),      # SWA + non-divisible + longer KV stream
 ])
 def test_chunked_mha_vs_ref(s, t, window, bq, bkv):
     """The lax.scan flash (what 32k-prefill cells lower) is exact."""

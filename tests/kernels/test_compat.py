@@ -1,0 +1,55 @@
+"""The shared interpret-mode policy (kernels/_compat.auto_interpret):
+one implementation for all three kernel wrappers, REPRO_INTERPRET override."""
+
+import jax
+import pytest
+
+from repro.kernels import _compat
+from repro.kernels.attention import ops as attention_ops
+from repro.kernels.grouped import ops as grouped_ops
+from repro.kernels.systolic import ops as systolic_ops
+
+
+def test_ops_share_one_implementation():
+    assert systolic_ops._auto_interpret is _compat.auto_interpret
+    assert attention_ops._auto_interpret is _compat.auto_interpret
+    assert grouped_ops._auto_interpret is _compat.auto_interpret
+
+
+def test_default_follows_backend(monkeypatch):
+    monkeypatch.delenv("REPRO_INTERPRET", raising=False)
+    assert _compat.auto_interpret() == (jax.default_backend() != "tpu")
+
+
+@pytest.mark.parametrize("val,expect", [
+    ("1", True), ("true", True), ("on", True), ("YES", True),
+    ("0", False), ("false", False), ("off", False), ("No", False),
+])
+def test_env_override(monkeypatch, val, expect):
+    monkeypatch.setenv("REPRO_INTERPRET", val)
+    assert _compat.auto_interpret() is expect
+
+
+@pytest.mark.parametrize("val", ["", "auto", " AUTO "])
+def test_env_auto_falls_through(monkeypatch, val):
+    monkeypatch.setenv("REPRO_INTERPRET", val)
+    assert _compat.auto_interpret() == (jax.default_backend() != "tpu")
+
+
+def test_env_garbage_rejected(monkeypatch):
+    monkeypatch.setenv("REPRO_INTERPRET", "maybe")
+    with pytest.raises(ValueError, match="REPRO_INTERPRET"):
+        _compat.auto_interpret()
+
+
+def test_forced_interpret_runs_kernel(monkeypatch):
+    """REPRO_INTERPRET=1 drives the wrappers' interpret default end to end
+    (on CPU this matches the backend rule, but exercises the env path)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    monkeypatch.setenv("REPRO_INTERPRET", "1")
+    a = jnp.asarray(np.random.default_rng(0).standard_normal((8, 16)), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(1).standard_normal((16, 8)), jnp.float32)
+    got = systolic_ops.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,333 @@
+"""Chunked prefill: per-request bit-exactness with isolated generation
+(GQA / SWA / MLA caches), mixed prefill/decode step behavior, the
+chunk-schedule bucketing rule, and the KV-pool slot-view primitives."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.data.synthetic import make_prompt, make_request_trace
+from repro.models.registry import get_model
+from repro.serving import (
+    ContinuousScheduler,
+    Request,
+    ServeConfig,
+    ServeEngine,
+    chunk_schedule,
+    requests_from_trace,
+)
+from repro.serving.kvpool import KVPool
+from repro.serving.scheduler import DECODING, FINISHED, PREFILLING
+
+# The three attention cache layouts whose offset writes + pos masking the
+# chunk path has to get right (full GQA, SWA ring, MLA latent).
+ARCHS = ["internlm2-1.8b", "h2o-danube-3-4b", "minicpm3-4b"]
+
+
+def _setup(arch, seed=0):
+    cfg = dataclasses.replace(get_smoke(arch), dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _trace(cfg, n=5, seed=3):
+    return make_request_trace(
+        cfg,
+        n_requests=n,
+        mean_prompt=8,
+        mean_gen=5,
+        rate=0.7,
+        seed=seed,
+        min_prompt=4,
+        max_prompt=12,
+        max_gen=8,
+    )
+
+
+def _max_len(trace):
+    return max(t["prompt"]["tokens"].shape[1] + t["max_new_tokens"] for t in trace)
+
+
+def _isolated(model, params, trace, max_len):
+    out = {}
+    for t in trace:
+        eng = ServeEngine(model, params, ServeConfig(max_len=max_len, batch=1))
+        out[t["rid"]] = np.asarray(
+            eng.generate(t["prompt"], n_steps=t["max_new_tokens"])
+        )[0]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Bucketing rule
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,chunk", [(1, 128), (7, 8), (10, 4), (300, 128),
+                                     (128, 128), (129, 128), (31, 5)])
+def test_chunk_schedule_covers_exactly(n, chunk):
+    sched = chunk_schedule(n, chunk)
+    off = 0
+    for o, length in sched:
+        assert o == off, "chunks must be contiguous and in order"
+        assert 1 <= length <= chunk
+        off += length
+    assert off == n, "chunks must tile the prompt exactly (no padding)"
+
+
+def test_chunk_schedule_buckets_are_bounded():
+    """Distinct chunk lengths (== distinct compiles / tune-cache rows) stay
+    bounded by log2(chunk)+2 over any prompt-length distribution."""
+    chunk = 128
+    lengths = set()
+    for n in range(1, 1000):
+        lengths |= {ln for _, ln in chunk_schedule(n, chunk)}
+    assert lengths <= {128, 64, 32, 16, 8, 4, 2, 1}
+    # non-power-of-two chunk sizes bucket the remainder the same way
+    lengths5 = set()
+    for n in range(1, 100):
+        lengths5 |= {ln for _, ln in chunk_schedule(n, 5)}
+    assert lengths5 <= {5, 4, 2, 1}
+
+
+def test_chunk_schedule_rejects_bad_args():
+    with pytest.raises(ValueError):
+        chunk_schedule(0, 8)
+    with pytest.raises(ValueError):
+        chunk_schedule(8, 0)
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: the acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_chunked_equals_isolated(arch):
+    """A ragged workload through the chunked mixed-step scheduler produces,
+    per request, exactly the greedy tokens of running each request alone
+    through generate() (monolithic prefill)."""
+    cfg, model, params = _setup(arch)
+    trace = _trace(cfg)
+    max_len = _max_len(trace)
+    engine = ServeEngine(model, params, ServeConfig(max_len=max_len, batch=2))
+    sched = ContinuousScheduler(engine, chunked_prefill=True, chunk_size=4)
+    got = sched.run(requests_from_trace(trace))
+    ref = _isolated(model, params, trace, max_len)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], got[rid])
+    assert sched.stats.prefill_chunks >= len(trace)
+
+
+def test_chunked_equals_monolithic_scheduler():
+    """Same trace through the same scheduler with and without chunking:
+    identical outputs (chunking is a latency policy, not a math change)."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    trace = _trace(cfg, n=6, seed=11)
+    max_len = _max_len(trace)
+    results = {}
+    for chunked in (False, True):
+        engine = ServeEngine(model, params, ServeConfig(max_len=max_len, batch=3))
+        sched = ContinuousScheduler(
+            engine, chunked_prefill=chunked, chunk_size=4
+        )
+        results[chunked] = sched.run(requests_from_trace(trace))
+    for rid in results[False]:
+        np.testing.assert_array_equal(results[False][rid], results[True][rid])
+
+
+def test_swa_ring_wrap_chunks_match_isolated():
+    """A prompt longer than the SWA window forces the ring-wrap chunk path
+    (concat attention over [pre-write cache, chunk]); generated tokens must
+    still match isolated generation."""
+    cfg, model, params = _setup("h2o-danube-3-4b")
+    plen, gen = cfg.window + 13, 6
+    max_len = plen + gen
+    prompt = make_prompt(cfg, seq=plen, seed=11)
+    eng = ServeEngine(model, params, ServeConfig(max_len=max_len, batch=1))
+    ref = np.asarray(eng.generate(prompt, n_steps=gen))[0]
+    engine = ServeEngine(model, params, ServeConfig(max_len=max_len, batch=2))
+    sched = ContinuousScheduler(engine, chunked_prefill=True, chunk_size=8)
+    got = sched.run([Request(rid=0, prompt=prompt, max_new_tokens=gen)])[0]
+    np.testing.assert_array_equal(ref, got)
+
+
+@pytest.mark.parametrize("arch", ["xlstm-125m", "zamba2-7b"])
+def test_sequential_families_chunked_equals_isolated(arch):
+    """SSM/hybrid chunks are truncated prefill scans carried through a
+    request-private staging cache -- exact by construction."""
+    cfg, model, params = _setup(arch)
+    prompt = make_prompt(cfg, seq=9, seed=5)
+    eng = ServeEngine(model, params, ServeConfig(max_len=16, batch=1))
+    ref = np.asarray(eng.generate(prompt, n_steps=5))[0]
+    engine = ServeEngine(model, params, ServeConfig(max_len=16, batch=2))
+    sched = ContinuousScheduler(engine, chunked_prefill=True, chunk_size=4)
+    got = sched.run([Request(rid=0, prompt=prompt, max_new_tokens=5)])[0]
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_vit_frontend_falls_back_to_monolithic():
+    cfg, model, params = _setup("internvl2-1b")
+    engine = ServeEngine(model, params, ServeConfig(max_len=8, batch=1))
+    assert not engine.supports_chunked_prefill
+    with pytest.warns(UserWarning, match="not chunkable"):
+        sched = ContinuousScheduler(engine, chunked_prefill=True)
+    assert not sched.chunked_prefill
+
+
+# ---------------------------------------------------------------------------
+# Mixed prefill/decode steps
+# ---------------------------------------------------------------------------
+
+
+def test_decode_progresses_while_long_prompt_prefills():
+    """The tentpole behavior: while a long prompt trickles in chunk by
+    chunk, the already-decoding request keeps emitting one token per tick
+    (monolithic prefill would stall it for the whole prompt forward)."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    short = Request(rid=0, prompt=make_prompt(cfg, seq=4, seed=1),
+                    max_new_tokens=20)
+    long_req = Request(rid=1, prompt=make_prompt(cfg, seq=16, seed=2),
+                       max_new_tokens=2, arrival=2.0)
+    max_len = 16 + 20
+    engine = ServeEngine(model, params, ServeConfig(max_len=max_len, batch=2))
+    sched = ContinuousScheduler(engine, chunked_prefill=True, chunk_size=4)
+    sched.submit(short)
+    sched.submit(long_req)
+    sched.warmup()
+    tokens_during_prefill = 0
+    prefilling_ticks = 0
+    while sched.pending() and long_req.state != FINISHED:
+        before = len(short.out)
+        sched.step()
+        if long_req.state == PREFILLING:
+            prefilling_ticks += 1
+            tokens_during_prefill += len(short.out) - before
+        assert sched.tick < 100
+    # 16 tokens at chunk 4 => 4 chunks => >= 3 ticks mid-prefill, and the
+    # short request decoded through every one of them
+    assert prefilling_ticks >= 3
+    assert tokens_during_prefill >= 3
+    assert long_req.state in (DECODING, FINISHED)
+
+
+def test_prefilling_slot_is_masked_and_progress_tracked():
+    cfg, model, params = _setup("internlm2-1.8b")
+    req = Request(rid=0, prompt=make_prompt(cfg, seq=10, seed=3),
+                  max_new_tokens=6)
+    engine = ServeEngine(model, params, ServeConfig(max_len=16, batch=2))
+    sched = ContinuousScheduler(engine, chunked_prefill=True, chunk_size=4)
+    sched.submit(req)
+    sched.warmup()
+    sched.step()  # admits + first chunk
+    assert req.state == PREFILLING
+    assert req.chunks == chunk_schedule(10, 4)
+    assert req.chunk_idx == 1
+    # mid-prefill: the slot is claimed but masked out of decode
+    assert sched.pool.n_active == 1
+    assert int(sched.pool.pos_vector()[req.slot]) == -1
+    while req.state == PREFILLING:
+        sched.step()
+    # the last-chunk tick also co-schedules one decode step, so the slot is
+    # live one position past the prompt length
+    assert req.state == DECODING
+    assert int(sched.pool.pos_vector()[req.slot]) == 10 + 1
+    assert req.chunk_idx == len(req.chunks)
+
+
+def test_chunk_budget_controls_prefill_rate():
+    """chunk_budget=2 drains a prompt's chunks in half the ticks."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    ticks = {}
+    for budget in (1, 2):
+        req = Request(rid=0, prompt=make_prompt(cfg, seq=16, seed=4),
+                      max_new_tokens=1)
+        engine = ServeEngine(model, params, ServeConfig(max_len=20, batch=1))
+        sched = ContinuousScheduler(
+            engine, chunked_prefill=True, chunk_size=4, chunk_budget=budget
+        )
+        sched.submit(req)
+        sched.warmup()
+        n = 0
+        while req.state != FINISHED:
+            sched.step()
+            n += 1
+            assert n < 50
+        ticks[budget] = n
+    assert ticks[2] < ticks[1]
+
+
+def test_warmup_precompile_does_not_advance_sampling():
+    """Warmup runs real prefill/decode work for its compiles but must not
+    consume the engine's PRNG stream: sampled serving (temperature > 0)
+    stays seed-reproducible whether or not shapes were precompiled."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    trace = _trace(cfg, n=3, seed=17)
+    max_len = _max_len(trace)
+    results = {}
+    for precompile in (True, False):
+        engine = ServeEngine(
+            model,
+            params,
+            ServeConfig(max_len=max_len, batch=2, temperature=0.7, seed=9),
+        )
+        sched = ContinuousScheduler(engine, precompile=precompile)
+        results[precompile] = sched.run(requests_from_trace(trace))
+    for rid in results[True]:
+        np.testing.assert_array_equal(results[True][rid], results[False][rid])
+
+
+def test_chunked_prefill_ticks_are_not_idle():
+    """A tick that lands a prefill chunk into an otherwise empty pool did
+    real work; it must not count as idle."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    req = Request(rid=0, prompt=make_prompt(cfg, seq=16, seed=6),
+                  max_new_tokens=2)
+    engine = ServeEngine(model, params, ServeConfig(max_len=20, batch=1))
+    sched = ContinuousScheduler(engine, chunked_prefill=True, chunk_size=4)
+    sched.run([req])
+    assert sched.stats.prefill_chunks == 4
+    assert sched.stats.idle_ticks == 0
+
+
+def test_scheduler_rejects_bad_chunk_args():
+    cfg, model, params = _setup("internlm2-1.8b")
+    engine = ServeEngine(model, params, ServeConfig(max_len=8, batch=1))
+    with pytest.raises(ValueError):
+        ContinuousScheduler(engine, chunked_prefill=True, chunk_size=0)
+    with pytest.raises(ValueError):
+        ContinuousScheduler(engine, chunked_prefill=True, chunk_budget=0)
+
+
+# ---------------------------------------------------------------------------
+# KV-pool slot-view primitives
+# ---------------------------------------------------------------------------
+
+
+def test_gather_write_slot_roundtrip():
+    cfg, model, params = _setup("internlm2-1.8b")
+    pool = KVPool(model, n_slots=3, max_len=8)
+    before = jax.tree.map(np.asarray, pool.cache)
+    view = pool.gather_slot(1)
+    for leaf in jax.tree.leaves(view):
+        assert leaf.shape[1] == 1
+    pool.write_slot(1, view, next_pos=None)
+    after = jax.tree.map(np.asarray, pool.cache)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a, b)
+    assert pool.positions[1] == -1  # next_pos=None keeps the slot masked
+    pool.write_slot(1, view, next_pos=5)
+    assert pool.positions[1] == 5
+
+
+def test_gather_slot_validates_index():
+    cfg, model, params = _setup("internlm2-1.8b")
+    pool = KVPool(model, n_slots=2, max_len=8)
+    with pytest.raises(ValueError):
+        pool.gather_slot(2)
+    with pytest.raises(ValueError):
+        pool.write_slot(0, pool.cache, next_pos=None)  # not batch-1

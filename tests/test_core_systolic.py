@@ -60,6 +60,30 @@ def test_block_plan_vmem_check_rejects_oversized():
     assert not big.fits_vmem()
 
 
+def test_vmem_accounting_matches_kernel_buffers():
+    """vmem_bytes mirrors the Pallas allocation: double-buffered A/B input
+    streams, single fp32 accumulator scratch, and a SINGLE output window --
+    the out block's (i, j) index is constant across the k-innermost sweep
+    and it is written once, on the final k step."""
+    p = BlockPlan(4096, 4096, 4096, 512, 512, 1024)
+    a = 512 * 1024 * 2 * 2   # bm*bk, bf16, double-buffered
+    b = 1024 * 512 * 2 * 2   # bk*bn, bf16, double-buffered
+    acc = 512 * 512 * 4      # bm*bn fp32 scratch, single
+    out = 512 * 512 * 2      # bm*bn out window, single
+    assert p.vmem_bytes() == a + b + acc + out
+
+
+def test_vmem_out_single_buffer_boundary_flip():
+    """A near-budget plan whose fitter verdict flips under the corrected
+    accounting: counting the output double-buffered (the old bug) pushes it
+    past the VMEM budget, the audited single-buffer accounting fits."""
+    plan = BlockPlan(8192, 8192, 8192, 2048, 2048, 2304)
+    budget = hw.get_chip(None).vmem_budget_bytes
+    overcounted = plan.vmem_bytes() + plan.bm * plan.bn * plan.in_dtype_bytes
+    assert plan.vmem_bytes() <= budget < overcounted
+    assert plan.fits_vmem()
+
+
 def test_dse_table1_analogue():
     recs = dse.explore(
         8192, 8192, 8192,

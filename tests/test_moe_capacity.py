@@ -1,0 +1,70 @@
+"""MoE capacity provisioning: the budget must be *ceiled* before the
+round-up-to-8.  Regression for the ``int()``-floor bug where an exact budget
+landing just above a multiple of 8 (e.g. T*k/E*cf = 16.5 -> 16 -> round_up
+-> 16) under-provisioned and silently dropped tokens at cf >= 1.0."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import moe
+
+
+def _moe_cfg(n_experts=4, top_k=2, capacity_factor=1.0):
+    cfg = get_smoke("qwen3-moe-30b-a3b")
+    return dataclasses.replace(
+        cfg,
+        dtype="float32",
+        moe=dataclasses.replace(
+            cfg.moe,
+            n_experts=n_experts,
+            top_k=top_k,
+            capacity_factor=capacity_factor,
+        ),
+    )
+
+
+def test_capacity_ceils_the_16p5_case():
+    """T=33, k=2, E=4, cf=1.0: budget 16.5.  The old floor gave 16 (already
+    a multiple of 8 -> no round-up rescue); the ceil gives 17 -> 24."""
+    cfg = _moe_cfg()
+    assert moe.capacity(33, cfg) == 24
+
+
+@pytest.mark.parametrize("cf", [1.0, 1.25])
+@pytest.mark.parametrize("e,k", [(4, 2), (8, 3), (4, 1)])
+def test_capacity_covers_budget_across_nondivisible_T(e, k, cf):
+    """capacity * E >= T * k * cf for every T: a perfectly balanced router
+    never drops a token at cf >= 1.0, whatever the (non-divisible) token
+    count."""
+    cfg = _moe_cfg(n_experts=e, top_k=k, capacity_factor=cf)
+    for t in range(1, 130):
+        assert moe.capacity(t, cfg) * e >= t * k * min(cf, 1.0) - 1e-9, t
+
+
+def test_balanced_assignment_drops_zero_tokens_at_cf1():
+    """Functional regression at the dispatch level: a balanced assignment
+    (experts loaded within one token of each other, the case cf = 1.0 is
+    specified to cover) must keep every (token, choice) slot in capacity --
+    and the combine must conserve each token's full routed mass."""
+    e, k, t = 4, 2, 33  # 66 slots over 4 experts: loads 17,17,16,16
+    cfg = _moe_cfg(n_experts=e, top_k=k, capacity_factor=1.0)
+    cap = moe.capacity(t, cfg)
+
+    flat = np.arange(t * k) % e  # balanced round-robin assignment
+    top_e = jnp.asarray(flat.reshape(t, k), jnp.int32)
+    top_w = jnp.full((t, k), 1.0 / k, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (t, cfg.d_model), jnp.float32)
+
+    xdisp, se, pos, stok, sw = moe._dispatch_group(x, top_e, top_w, cap, cfg)
+    assert int(jnp.max(pos)) < cap, (
+        f"balanced load {int(jnp.max(pos)) + 1} exceeds capacity {cap}: "
+        "tokens dropped at capacity_factor=1.0"
+    )
+    # identity "experts": combine(dispatch(x)) must reproduce x exactly
+    y = moe._combine_group(xdisp, se, pos, stok, sw, t, cap, jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-5, atol=1e-5)
