@@ -19,6 +19,9 @@
             collective matmul vs gather-then-matmul vs single-device
             (subprocess -- the device-count flag must precede jax init);
             BENCH JSON lines
+  quant     quantized vs bf16 GEMM (dtype-aware model + measured numbers;
+            asserts the model predicts int8 >= 1.5x bf16) and fp vs
+            w8a16/kv8 serve tok/s on one small trace; BENCH JSON lines
 """
 
 from __future__ import annotations
@@ -29,6 +32,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        quant_matmul,
         roofline_report,
         serve_throughput,
         table1_dse,
@@ -47,6 +51,7 @@ def main() -> None:
         "serve": serve_throughput.run,
         "serve_long": serve_throughput.run_longprompt,
         "tp": tp_matmul.run,
+        "quant": quant_matmul.run,
     }
     want = sys.argv[1:] or list(tables)
     for name in want:

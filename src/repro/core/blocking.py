@@ -37,7 +37,7 @@ class BlockPlan:
     bm: int
     bn: int
     bk: int
-    in_dtype_bytes: int = 2  # bf16 streams
+    in_dtype_bytes: int = 2  # bf16 streams (derived from in_dtype when set)
     acc_dtype_bytes: int = 4  # fp32 accumulator, always
     double_buffer: bool = True
     # -- level-3 (mesh): degree of the "model" axis this plan shards over.
@@ -45,6 +45,41 @@ class BlockPlan:
     # decomposition of distributed/collective_matmul.py (A row-sharded, B
     # column-sharded, tp ring steps of an (m/tp, k) x (k, n/tp) block each).
     tp: int = 1
+    # -- dtype identity: when set, ``in_dtype_bytes`` is derived from the
+    # hw.DTYPE_BYTES table (so a wrong-dtype plan can't silently use bf16
+    # sizing) and the roofline compute term uses the per-dtype peak
+    # (int8 ~ 2x bf16, the DSP-packing analogue).
+    in_dtype: str | None = None
+    # -- quantization (DESIGN.md §10): scale-block length along K (0 = not
+    # quantized).  Quantized plans stream fp32 scale sidecars -- per-row x
+    # per-k-block for A, per-k-block x per-column for B -- which count
+    # toward VMEM occupancy and HBM traffic below.
+    quant_block_k: int = 0
+    scale_dtype_bytes: int = 4
+    # Output element size; None = same as the input stream (fp plans).
+    # Quantized plans emit wide outputs (bf16/fp32) from narrow streams.
+    out_dtype_bytes: int | None = None
+
+    def __post_init__(self):
+        if self.in_dtype is not None:
+            object.__setattr__(
+                self, "in_dtype_bytes", hw.dtype_bytes(self.in_dtype)
+            )
+
+    @property
+    def _out_bytes(self) -> int:
+        return (
+            self.in_dtype_bytes
+            if self.out_dtype_bytes is None
+            else self.out_dtype_bytes
+        )
+
+    @property
+    def _k_scale_blocks(self) -> int:
+        """Number of scale blocks along K (0 when unquantized)."""
+        if not self.quant_block_k:
+            return 0
+        return math.ceil(self.k / self.quant_block_k)
 
     # -- level-1 (VMEM) occupancy: the "fitter" check -----------------------
 
@@ -69,8 +104,13 @@ class BlockPlan:
         a_block = self.bm * self.bk * self.in_dtype_bytes * mult
         b_block = self.bk * self.bn * self.in_dtype_bytes * mult
         acc = self.bm * self.bn * self.acc_dtype_bytes
-        out = self.bm * self.bn * self.in_dtype_bytes
-        return a_block + b_block + acc + out
+        out = self.bm * self.bn * self._out_bytes
+        scales = 0
+        if self.quant_block_k:
+            # One (bm, 1) A-scale and one (1, bn) B-scale column per k-step,
+            # streamed (double-buffered) like the value blocks they scale.
+            scales = (self.bm + self.bn) * self.scale_dtype_bytes * mult
+        return a_block + b_block + acc + out + scales
 
     def fits_vmem(self, chip: hw.Chip | str | None = None) -> bool:
         return self.vmem_bytes() <= hw.get_chip(chip).vmem_budget_bytes
@@ -108,8 +148,17 @@ class BlockPlan:
         n_row_blocks = math.ceil(self.m / self.bm)
         a_bytes = self.m * self.k * self.in_dtype_bytes * n_col_blocks
         b_bytes = self.k * self.n * self.in_dtype_bytes * n_row_blocks
-        c_bytes = self.m * self.n * self.in_dtype_bytes
-        return a_bytes + b_bytes + c_bytes
+        c_bytes = self.m * self.n * self._out_bytes
+        s_bytes = 0
+        if self.quant_block_k:
+            kb = self._k_scale_blocks
+            # Scale sidecars re-stream with their value arrays: A's (M, kb)
+            # once per column block, B's (kb, N) once per row block.
+            s_bytes = (
+                self.m * kb * self.scale_dtype_bytes * n_col_blocks
+                + kb * self.n * self.scale_dtype_bytes * n_row_blocks
+            )
+        return a_bytes + b_bytes + c_bytes + s_bytes
 
     def flops(self) -> int:
         return 2 * self.m * self.n * self.k
@@ -119,12 +168,14 @@ class BlockPlan:
         return self.flops() / self.hbm_traffic_bytes()
 
     def compute_bound(self, chip: hw.Chip | str | None = None) -> bool:
-        return self.arithmetic_intensity() >= hw.get_chip(chip).machine_balance_hbm
+        return self.arithmetic_intensity() >= hw.get_chip(chip).machine_balance(
+            self.in_dtype
+        )
 
     # -- roofline terms (seconds on one chip) --------------------------------
 
     def compute_seconds(self, chip: hw.Chip | str | None = None) -> float:
-        return self.flops() / hw.get_chip(chip).peak_flops_bf16
+        return self.flops() / hw.get_chip(chip).peak_flops(self.in_dtype)
 
     def memory_seconds(self, chip: hw.Chip | str | None = None) -> float:
         return self.hbm_traffic_bytes() / hw.get_chip(chip).hbm_bw
@@ -158,7 +209,7 @@ class BlockPlan:
     def shard_step_seconds(self, chip: hw.Chip | str | None = None) -> float:
         """Compute time of one ring step's block matmul on one shard."""
         sm, sn, sk = self.shard_shape()
-        return 2 * sm * sn * sk / hw.get_chip(chip).peak_flops_bf16
+        return 2 * sm * sn * sk / hw.get_chip(chip).peak_flops(self.in_dtype)
 
     def mesh_balanced(self, chip: hw.Chip | str | None = None, links: int = 1) -> bool:
         """Collective-bytes-under-compute: every hop hides under a step."""
@@ -181,7 +232,8 @@ def derive_block_plan(
     n: int,
     k: int,
     *,
-    in_dtype_bytes: int = 2,
+    in_dtype: str | None = None,
+    in_dtype_bytes: int | None = None,
     chip: hw.Chip | str | None = None,
     max_bm: int = 1024,
     max_bn: int = 1024,
@@ -195,8 +247,16 @@ def derive_block_plan(
     dim (their d_k0, our bk) is the cheap axis to grow -- it adds reuse for
     *neither* operand but amortises accumulator traffic and lengthens the
     pipeline (their register chains, our MXU pipeline occupancy).
+
+    ``in_dtype`` is the preferred way to size the streams (element bytes
+    from the ``hw.DTYPE_BYTES`` table); the raw ``in_dtype_bytes`` knob
+    remains for callers that genuinely have no dtype, defaulting to bf16.
     """
     chip = hw.get_chip(chip)
+    if in_dtype is not None:
+        in_dtype_bytes = hw.dtype_bytes(in_dtype)
+    elif in_dtype_bytes is None:
+        in_dtype_bytes = 2
     quantum = chip.lane_dim
 
     # Start square and balanced: need harmonic-mean(bm,bn)/2 * 2/bytes >= CB
@@ -212,16 +272,16 @@ def derive_block_plan(
     # bk: as large as VMEM allows (paper: d_k0 'controls the data throughput
     # between processing elements'); bounded by K itself.
     bk = min(max_bk, _round_to(k, quantum) if k >= quantum else quantum)
-    plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+    plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype=in_dtype, in_dtype_bytes=in_dtype_bytes)
     while not plan.fits_vmem(chip) and bk > quantum:
         bk //= 2
-        plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+        plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype=in_dtype, in_dtype_bytes=in_dtype_bytes)
     while not plan.fits_vmem(chip) and (bm > chip.sublane_dim or bn > quantum):
         if bm >= bn and bm > chip.sublane_dim:
             bm //= 2
         else:
             bn //= 2
-        plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+        plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype=in_dtype, in_dtype_bytes=in_dtype_bytes)
     if not plan.fits_vmem(chip):
         raise ValueError(f"no feasible block plan for ({m},{n},{k})")
     return plan
@@ -238,7 +298,8 @@ def tensor_parallel_balance(
     k: int,
     tp: int,
     *,
-    in_dtype_bytes: int = 2,
+    in_dtype: str | None = None,
+    in_dtype_bytes: int | None = None,
     links: int = 1,
     chip: hw.Chip | str | None = None,
 ) -> dict[str, float]:
@@ -251,9 +312,13 @@ def tensor_parallel_balance(
     analogue of 'no stalls'.
     """
     chip = hw.get_chip(chip)
+    if in_dtype is not None:
+        in_dtype_bytes = hw.dtype_bytes(in_dtype)
+    elif in_dtype_bytes is None:
+        in_dtype_bytes = 2
     per_chip_flops = 2 * m * n * k / tp
     ag_bytes = m * k * in_dtype_bytes * (tp - 1) / tp
-    t_compute = per_chip_flops / chip.peak_flops_bf16
+    t_compute = per_chip_flops / chip.peak_flops(in_dtype)
     t_coll = ag_bytes / (chip.ici_bw_per_link * links)
     return {
         "t_compute": t_compute,

@@ -36,6 +36,13 @@ class DSERecord:
     n: int = 0
     k: int = 0
     in_dtype_bytes: int = 2
+    # Dtype identity (None = legacy bf16-sized record).  int8 and fp8 both
+    # stream 1 byte/element but key different kernels and cache entries, so
+    # bytes alone cannot identify a quantized record.
+    in_dtype: str | None = None
+    # Scale-block length along K for quantized records (0 = unquantized);
+    # the roofline columns then include the fp32 scale-sidecar traffic.
+    quant_block_k: int = 0
     # The measured column: Table I's f_max analogue.  ``explore`` leaves it
     # None (analytical half only); ``attach_measurements`` / repro.tune fill
     # it in from real kernel timings.
@@ -61,6 +68,20 @@ class DSERecord:
         return dataclasses.replace(self, measured_us=float(measured_us))
 
 
+# Canonical storage names to enumerate when sweeping the quant level
+# (classification itself lives in repro.quant.qarray.is_quant_dtype).
+QUANT_DTYPES = ("int8", "float8_e4m3fn")
+
+
+def _quant_block_k(in_dtype: str | None, quant_block_k: int | None) -> int:
+    """Default scale granularity: the lane tile for narrow dtypes, else 0."""
+    from repro.quant.qarray import is_quant_dtype
+
+    if quant_block_k is not None:
+        return quant_block_k
+    return 128 if (in_dtype is not None and is_quant_dtype(in_dtype)) else 0
+
+
 def explore(
     m: int,
     n: int,
@@ -69,7 +90,9 @@ def explore(
     bms=(128, 256, 512, 1024),
     bns=(128, 256, 512, 1024),
     bks=(128, 256, 512, 1024, 2048),
-    in_dtype_bytes: int = 2,
+    in_dtype: str | None = None,
+    in_dtype_bytes: int | None = None,
+    quant_block_k: int | None = None,
     chip: hw.Chip | str | None = None,
     tps=(1,),
 ) -> list[DSERecord]:
@@ -81,21 +104,40 @@ def explore(
     and ``mesh_balanced`` records whether each ring hop's collective bytes
     hide under one block matmul (eq. 14 one level up; candidates whose M or
     N does not divide tp are skipped, like any other infeasible geometry).
+
+    ``in_dtype`` adds the quant level: element bytes come from the
+    ``hw.DTYPE_BYTES`` table, the compute column uses the per-dtype peak
+    (int8/fp8 ~ 2x bf16), and narrow dtypes stream fp32 scale sidecars at
+    ``quant_block_k`` granularity (default: the 128 lane tile), counted in
+    the VMEM fitter and the memory column.
     """
     chip = hw.get_chip(chip)
+    if in_dtype is None and in_dtype_bytes is None:
+        in_dtype_bytes = 2
+    qbk = _quant_block_k(in_dtype, quant_block_k)
+    plan_kw = dict(
+        in_dtype=in_dtype,
+        in_dtype_bytes=in_dtype_bytes or 2,
+        quant_block_k=qbk,
+        out_dtype_bytes=2 if qbk else None,
+    )
     records = []
     for tp in tps:
         if m % tp or n % tp:
             continue
         sm, sn = m // tp, n // tp
-        mesh_plan = BlockPlan(
-            m, n, k, 0, 0, 0, in_dtype_bytes=in_dtype_bytes, tp=tp
-        )
+        mesh_plan = BlockPlan(m, n, k, 0, 0, 0, tp=tp, **plan_kw)
         balanced = mesh_plan.mesh_balanced(chip)  # block-shape invariant
         for bm, bn, bk in itertools.product(bms, bns, bks):
             if sm % bm or sn % bn or k % bk:
                 continue
-            plan = BlockPlan(sm, sn, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
+            if qbk and qbk % bk:
+                # The quant kernel needs one scale block to span >= one
+                # whole k-step (qk % bk == 0); the dispatcher gcd-clamps
+                # any other bk, so the geometry as enumerated would never
+                # run -- pricing it would skew the ranking.
+                continue
+            plan = BlockPlan(sm, sn, k, bm, bn, bk, **plan_kw)
             fits = plan.fits_vmem(chip) and plan.mxu_aligned(chip)
             records.append(
                 DSERecord(
@@ -112,7 +154,9 @@ def explore(
                     m=m,
                     n=n,
                     k=k,
-                    in_dtype_bytes=in_dtype_bytes,
+                    in_dtype_bytes=plan.in_dtype_bytes,
+                    in_dtype=in_dtype,
+                    quant_block_k=qbk,
                     tp=tp,
                     mesh_balanced=balanced,
                 )

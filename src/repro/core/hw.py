@@ -79,10 +79,28 @@ class TPUv5e:
     lane_dim: int = 128
     sublane_dim: int = 8
 
+    def peak_flops(self, dtype: str | None = None) -> float:
+        """Per-dtype peak FLOP/s: the DSP-packing analogue (DESIGN.md §10).
+
+        Stratix 10 DSPs pack two narrow fixed-point multiplies per block in
+        int mode -- the same silicon does 2x the work on narrow operands.
+        The MXU analogue: int8/fp8 passes run at ~2x the bf16 peak, fp32 at
+        half.  ``None``/unknown dtypes report the bf16 peak.
+        """
+        if dtype is None:
+            return self.peak_flops_bf16
+        return self.peak_flops_bf16 * PEAK_FLOPS_MULT.get(str(dtype), 1.0)
+
     @property
     def machine_balance_hbm(self) -> float:
         """FLOP per HBM byte needed to be compute-bound (~240 for v5e)."""
         return self.peak_flops_bf16 / self.hbm_bw
+
+    def machine_balance(self, dtype: str | None = None) -> float:
+        """Dtype-aware FLOP-per-HBM-byte balance: int8 doubles the peak, so
+        a quantized matmul must also deliver ~2x the arithmetic intensity
+        (which its 1-byte streams do) to stay compute-bound."""
+        return self.peak_flops(dtype) / self.hbm_bw
 
     def machine_balance_ici(self, links: int = 1) -> float:
         """FLOP per collective byte needed for collectives to hide."""
@@ -179,4 +197,36 @@ DTYPE_BYTES = {
     "float16": 2,
     "int8": 1,
     "fp8": 1,
+    "float8_e4m3fn": 1,
+    "float8_e5m2": 1,
 }
+
+# Per-dtype peak-FLOPs multipliers relative to bf16 (see Chip.peak_flops):
+# narrow int/fp8 streams pack 2x the MACs per unit -- the Stratix DSP
+# int-mode packing trick -- while fp32 halves the MXU rate.
+PEAK_FLOPS_MULT = {
+    "bfloat16": 1.0,
+    "float16": 1.0,
+    "float32": 0.5,
+    "int8": 2.0,
+    "fp8": 2.0,
+    "float8_e4m3fn": 2.0,
+    "float8_e5m2": 2.0,
+}
+
+
+def dtype_bytes(dtype) -> int:
+    """Element size of a dtype name/object -- the one lookup every plan
+    constructor goes through (no more hardcoded ``in_dtype_bytes=2``)."""
+    name = str(dtype)
+    if name in DTYPE_BYTES:
+        return DTYPE_BYTES[name]
+    import numpy as np
+
+    try:
+        return int(np.dtype(dtype).itemsize)
+    except TypeError:
+        # jax-only dtypes (bfloat16 objects etc.) stringify to known names;
+        # anything else falls back to the bf16 default the old call sites
+        # hardcoded.
+        return 2

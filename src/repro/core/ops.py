@@ -49,9 +49,14 @@ def use_backend(name: str):
         _BACKEND.reset(token)
 
 
+# The precision= spellings that select quantized dispatch: exactly the
+# repro.quant registry keys ("int8", "fp8"), aliased so the two stay in sync.
+from repro.quant.qarray import QDTYPES as QUANT_PRECISIONS  # noqa: E402
+
+
 def matmul(
     x: jax.Array,
-    w: jax.Array,
+    w,
     *,
     out_dtype=None,
     precision=None,
@@ -60,7 +65,25 @@ def matmul(
 
     Contraction always accumulates in fp32 (preferred_element_type), the
     TPU-native analogue of the paper's DSP fused multiply-add chains.
+
+    Quantized dispatch (DESIGN.md §10): ``precision="int8"``/``"fp8"``
+    quantizes both operands on the fly and runs the block-scaled narrow
+    GEMM; a ``repro.quant.QArray`` weight routes here automatically --
+    weight-only (w8a16: the QArray dequantizes at the GEMM) unless an
+    activation-quant policy (``quant.use_act_quant``) or an explicit
+    ``precision`` upgrades it to w8a8.  Any other ``precision`` value is
+    the usual ``jax.lax`` precision passed through to the XLA backend.
     """
+    from repro.quant.qarray import QArray
+
+    if isinstance(w, QArray) or precision in QUANT_PRECISIONS:
+        return _quant_matmul(
+            x,
+            w,
+            out_dtype=out_dtype,
+            qprec=precision if precision in QUANT_PRECISIONS else None,
+        )
+
     backend = _BACKEND.get()
     out_dtype = out_dtype or x.dtype
     lead = x.shape[:-1]
@@ -106,10 +129,55 @@ def matmul(
 
         m, n = x2.shape[0], w.shape[1]
         bm, bn, bk = _reference_blocks(m, n, k, x2.dtype)
-        plan = BlockPlan(m, n, k, bm, bn, bk)
+        plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype=str(x2.dtype))
         y2 = blocked_matmul(x2, w, plan).astype(out_dtype)
     else:  # pragma: no cover
         raise AssertionError(backend)
+    return y2.reshape(*lead, w.shape[1])
+
+
+def _quant_matmul(x: jax.Array, w, *, out_dtype, qprec: str | None) -> jax.Array:
+    """Quantized projection dispatch (weight QArray and/or explicit precision).
+
+    Modes (see DESIGN.md §10):
+
+      w8a16  weight QArray, activations wide: the weight dequantizes at the
+             GEMM and the fp path runs as usual (memory-side win only).
+      w8a8   activation quant requested -- via ``precision=`` or the
+             ``quant.use_act_quant`` policy: activations quantize per-token
+             x per-k-block and the narrow kernel runs end to end on the
+             "pallas-systolic" backend.  Other backends compute the SAME
+             quantized numerics through dequantized values, so equivalence
+             tests and dry-runs see one set of semantics regardless of
+             backend.
+    """
+    from repro import quant
+    from repro.quant.qarray import QArray
+
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    if w.shape[0] != k:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {w.shape}")
+    act_qd = qprec or quant.act_qdtype()
+    wq = w if isinstance(w, QArray) else quant.quantize_weight(w, act_qd or "int8")
+    out_dtype = out_dtype or x.dtype
+
+    if act_qd is None:
+        # Weight-only: rejoin the fp path with the dequantized weight.
+        return matmul(x, wq.dequantize(x.dtype), out_dtype=out_dtype)
+
+    x2 = x.reshape(-1, k)
+    xq = quant.quantize_act(x2, act_qd)
+    if _BACKEND.get() == "pallas-systolic":
+        from repro.kernels.systolic import ops as systolic_ops
+
+        y2 = systolic_ops.quant_matmul(xq, wq, out_dtype=out_dtype)
+    else:
+        y2 = jnp.dot(
+            xq.dequantize(jnp.float32),
+            wq.dequantize(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ).astype(out_dtype)
     return y2.reshape(*lead, w.shape[1])
 
 

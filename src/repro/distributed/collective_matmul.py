@@ -125,7 +125,9 @@ def _local_matmul(x, w, *, out_dtype, block, interpret):
 
     plan = None
     if block is not None:
-        plan = BlockPlan(x.shape[0], w.shape[1], x.shape[1], *block)
+        plan = BlockPlan(
+            x.shape[0], w.shape[1], x.shape[1], *block, in_dtype=str(x.dtype)
+        )
     return systolic_ops.matmul(
         x, w, out_dtype=out_dtype, plan=plan, interpret=interpret
     )

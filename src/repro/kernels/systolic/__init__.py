@@ -1,2 +1,2 @@
 from repro.kernels.systolic import ops, ref  # noqa: F401
-from repro.kernels.systolic.ops import matmul  # noqa: F401
+from repro.kernels.systolic.ops import matmul, quant_matmul  # noqa: F401

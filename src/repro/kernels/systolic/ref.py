@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the systolic matmul kernel."""
+"""Pure-jnp oracles for the systolic matmul kernels (fp and quantized)."""
 
 from __future__ import annotations
 
@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.systolic.kernel import ACTIVATIONS
+from repro.quant.qarray import QArray
 
 
 def matmul_ref(
@@ -21,4 +22,24 @@ def matmul_ref(
     y = jnp.dot(a, b, preferred_element_type=jnp.float32)
     if bias is not None:
         y = y + bias.astype(jnp.float32)
+    return ACTIVATIONS[activation](y).astype(out_dtype)
+
+
+def quant_matmul_ref(
+    qa: QArray,
+    qb: QArray,
+    *,
+    activation: str = "none",
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Dequantize-then-fp32-matmul oracle for the quantized kernel.
+
+    The kernel instead keeps the narrow dot and applies scales per k-step;
+    the two agree up to fp32 summation order (the quantized *values* are
+    identical), so the tolerance in tests is set by scale granularity, not
+    by any algorithmic difference.
+    """
+    a = qa.dequantize(jnp.float32)
+    b = qb.dequantize(jnp.float32)
+    y = jnp.dot(a, b, preferred_element_type=jnp.float32)
     return ACTIVATIONS[activation](y).astype(out_dtype)

@@ -21,6 +21,15 @@ longer stalls every decoding slot for a whole prompt forward (compare the
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
         --continuous --chunked-prefill --chunk-size 16 --requests 16 --slots 4
 
+Quantized serving (``--quantize``, DESIGN.md §10): ``w8a16`` quantizes the
+projection weights to block-scaled int8 (dequantized at each GEMM),
+``w8a8`` additionally quantizes activations per token and runs the narrow
+systolic kernel, ``kv8`` keeps the continuous-batching KV pool resident in
+int8 with per-head-per-slot scales::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --continuous --quantize kv8 --requests 16 --slots 4
+
 Tensor-parallel decode (either mode): ``--model-parallel N`` runs the engine
 over a (1, N) ("data", "model") mesh -- params TP-sharded by the
 ``distributed.sharding`` rules, caches sharded by GSPMD propagation.  Keep
@@ -35,6 +44,7 @@ otherwise).  On CPU, fake the devices first::
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -137,6 +147,7 @@ def run_continuous(model, params, args) -> None:
         chunked_prefill=args.chunked_prefill,
         chunk_size=args.chunk_size,
         chunk_budget=args.chunk_budget,
+        quantize_kv=args.quantize == "kv8",
     )
     results = sched.run(requests_from_trace(trace))
 
@@ -210,6 +221,16 @@ def main() -> None:
         default=1,
         help="max prefill chunks per scheduler tick",
     )
+    ap.add_argument(
+        "--quantize",
+        choices=("none", "w8a16", "w8a8", "kv8"),
+        default="none",
+        help="quantized serving (DESIGN.md §10): w8a16 = int8 weight-only "
+        "(weights dequantize at each GEMM), w8a8 = int8 weights AND dynamic "
+        "per-token int8 activations through the quantized systolic kernel, "
+        "kv8 = int8 KV-cache pool with per-head-per-slot scales "
+        "(continuous mode only)",
+    )
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -217,10 +238,29 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
 
-    if args.continuous:
-        run_continuous(model, params, args)
-    else:
-        run_synchronized(model, params, args)
+    act_ctx = contextlib.nullcontext()
+    if args.quantize in ("w8a16", "w8a8"):
+        from repro import quant
+
+        params = quant.quantize_params(params)
+        n_q, q_bytes = quant.count_quantized(params)
+        print(
+            f"quantize[{args.quantize}]: {n_q} projection weights -> int8 "
+            f"({q_bytes / 1e6:.1f} MB resident values)"
+        )
+        if args.quantize == "w8a8":
+            act_ctx = quant.use_act_quant("int8")
+    elif args.quantize == "kv8" and not args.continuous:
+        import warnings
+
+        warnings.warn("--quantize kv8 applies to the continuous-batching "
+                      "KV pool; ignored in synchronized mode")
+
+    with act_ctx:
+        if args.continuous:
+            run_continuous(model, params, args)
+        else:
+            run_synchronized(model, params, args)
 
 
 if __name__ == "__main__":

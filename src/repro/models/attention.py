@@ -468,9 +468,9 @@ def gqa_fwd(params: dict, x: jax.Array, cfg: ArchConfig, positions: jax.Array):
     """Full-sequence self attention.  x: (B, S, d), positions: (S,)."""
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
-    q = ops.matmul(x, params["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
-    k = ops.matmul(x, params["wk"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
-    v = ops.matmul(x, params["wv"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    q = ops.matmul(x, layers.wcast(params["wq"], x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = ops.matmul(x, layers.wcast(params["wk"], x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = ops.matmul(x, layers.wcast(params["wv"], x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
         k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
@@ -486,7 +486,7 @@ def gqa_fwd(params: dict, x: jax.Array, cfg: ArchConfig, positions: jax.Array):
         o = _sdpa_flashvjp(q, k, v, cfg)
     else:
         o = _sdpa(q, k, v, _mask(positions, positions, window), cfg.q_per_kv)
-    y = ops.matmul(o.reshape(b, s, -1), params["wo"].astype(x.dtype))
+    y = ops.matmul(o.reshape(b, s, -1), layers.wcast(params["wo"], x.dtype))
     return y, (k, v)
 
 
@@ -560,9 +560,9 @@ def gqa_decode(
     computes a throwaway output without ever touching valid state."""
     b, _, d = x.shape
     hd = cfg.resolved_head_dim
-    q = ops.matmul(x, params["wq"].astype(x.dtype)).reshape(b, 1, cfg.n_heads, hd)
-    k = ops.matmul(x, params["wk"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, hd)
-    v = ops.matmul(x, params["wv"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, hd)
+    q = ops.matmul(x, layers.wcast(params["wq"], x.dtype)).reshape(b, 1, cfg.n_heads, hd)
+    k = ops.matmul(x, layers.wcast(params["wk"], x.dtype)).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = ops.matmul(x, layers.wcast(params["wv"], x.dtype)).reshape(b, 1, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
         k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
@@ -594,7 +594,7 @@ def gqa_decode(
     w = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bgqst,btgd->bsgqd", w.astype(cv.dtype), cv)
     o = o.reshape(b, 1, cfg.n_heads * hd)
-    y = ops.matmul(o, params["wo"].astype(x.dtype))
+    y = ops.matmul(o, layers.wcast(params["wo"], x.dtype))
     return y, {"k": ck, "v": cv, "pos": cpos}
 
 
@@ -631,9 +631,9 @@ def gqa_prefill_chunk(
     """
     b, l, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = ops.matmul(x, params["wq"].astype(x.dtype)).reshape(b, l, cfg.n_heads, hd)
-    k = ops.matmul(x, params["wk"].astype(x.dtype)).reshape(b, l, cfg.n_kv_heads, hd)
-    v = ops.matmul(x, params["wv"].astype(x.dtype)).reshape(b, l, cfg.n_kv_heads, hd)
+    q = ops.matmul(x, layers.wcast(params["wq"], x.dtype)).reshape(b, l, cfg.n_heads, hd)
+    k = ops.matmul(x, layers.wcast(params["wk"], x.dtype)).reshape(b, l, cfg.n_kv_heads, hd)
+    v = ops.matmul(x, layers.wcast(params["wv"], x.dtype)).reshape(b, l, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
         k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
@@ -659,7 +659,7 @@ def gqa_prefill_chunk(
     if window is not None:
         valid &= kpos[:, None, :] > (posb - window)[:, :, None]
     o = _sdpa(q, keys, vals, valid, cfg.q_per_kv)  # (B, L, Hq, hd)
-    y = ops.matmul(o.reshape(b, l, -1), params["wo"].astype(x.dtype))
+    y = ops.matmul(o.reshape(b, l, -1), layers.wcast(params["wo"], x.dtype))
     return y, {"k": ck, "v": cv, "pos": cpos}
 
 
@@ -692,9 +692,9 @@ def _mla_qkv(params, x, cfg, positions):
     b, s, _ = x.shape
     h = cfg.n_heads
     q_lat = layers.rmsnorm(
-        params["q_norm"], ops.matmul(x, params["wq_a"].astype(x.dtype)), cfg.norm_eps
+        params["q_norm"], ops.matmul(x, layers.wcast(params["wq_a"], x.dtype)), cfg.norm_eps
     )
-    q = ops.matmul(q_lat, params["wq_b"].astype(x.dtype)).reshape(
+    q = ops.matmul(q_lat, layers.wcast(params["wq_b"], x.dtype)).reshape(
         b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim
     )
     q_nope, q_rope = (
@@ -703,7 +703,7 @@ def _mla_qkv(params, x, cfg, positions):
     )
     q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
 
-    kv = ops.matmul(x, params["wkv_a"].astype(x.dtype))
+    kv = ops.matmul(x, layers.wcast(params["wkv_a"], x.dtype))
     c_kv = layers.rmsnorm(params["kv_norm"], kv[..., : m.kv_lora_rank], cfg.norm_eps)
     k_rope = kv[..., m.kv_lora_rank :][:, :, None, :]  # (B,S,1,rope)
     k_rope = layers.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
@@ -741,7 +741,7 @@ def mla_fwd(params: dict, x: jax.Array, cfg: ArchConfig, positions: jax.Array):
         scores = jnp.where(mask[None, None], scores, -1e30)
         w = jax.nn.softmax(scores, axis=-1)
         o = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v).reshape(b, s, -1)
-    y = ops.matmul(o, params["wo"].astype(x.dtype))
+    y = ops.matmul(o, layers.wcast(params["wo"], x.dtype))
     return y, (c_kv, k_rope)
 
 
@@ -804,7 +804,7 @@ def mla_decode(
     w = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhst,btl->bshl", w.astype(ck.dtype), ck)  # latent ctx
     o = jnp.einsum("bshl,lhd->bshd", ctx, w_uv).reshape(b, 1, -1)
-    y = ops.matmul(o, params["wo"].astype(x.dtype))
+    y = ops.matmul(o, layers.wcast(params["wo"], x.dtype))
     return y, {"c_kv": ck, "k_rope": cr, "pos": cpos}
 
 
@@ -865,5 +865,5 @@ def mla_prefill_chunk(
     scores = jnp.where(valid[:, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v).reshape(b, l, -1)
-    y = ops.matmul(o, params["wo"].astype(x.dtype))
+    y = ops.matmul(o, layers.wcast(params["wo"], x.dtype))
     return y, {"c_kv": ck, "k_rope": cr, "pos": cpos}

@@ -3,6 +3,13 @@
 Everything is functional: ``init_*`` returns a dict pytree of arrays,
 ``*_fwd`` applies it.  All dense projections route through
 ``repro.core.ops.matmul`` so the paper's GEMM substrate is framework-wide.
+
+Weight-only quantization (DESIGN.md §10): ``repro.quant.quantize_params``
+replaces projection weights with block-scaled ``QArray``s.  Every GEMM here
+casts its weight through ``wcast``, which passes QArrays straight into
+``ops.matmul`` -- where they dequantize at the GEMM (w8a16) or drive the
+quantized systolic kernel (w8a8) -- so one params pytree serves fp and
+quantized decode through identical layer code.
 """
 
 from __future__ import annotations
@@ -11,6 +18,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ops
+from repro.quant.qarray import QArray
+
+
+def wcast(w, dtype):
+    """Cast a (possibly quantized) projection weight for a GEMM.
+
+    fp weights cast to the compute dtype; ``QArray`` weights pass through
+    unchanged (their compute dtype is decided at the GEMM by
+    ``core.ops.matmul``'s quantized dispatch).
+    """
+    if isinstance(w, QArray):
+        return w
+    return w.astype(dtype)
 
 
 def _dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
@@ -89,10 +109,10 @@ def init_swiglu(key, d: int, d_ff: int) -> dict:
 
 def swiglu(params: dict, x: jax.Array) -> jax.Array:
     dt = x.dtype
-    gate = ops.matmul(x, params["w_gate"].astype(dt))
-    up = ops.matmul(x, params["w_up"].astype(dt))
+    gate = ops.matmul(x, wcast(params["w_gate"], dt))
+    up = ops.matmul(x, wcast(params["w_up"], dt))
     return ops.matmul(jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up,
-                      params["w_down"].astype(dt))
+                      wcast(params["w_down"], dt))
 
 
 # -- Dense (bias-free) projection ---------------------------------------------
@@ -103,4 +123,4 @@ def init_dense(key, d_in: int, d_out: int) -> dict:
 
 
 def dense(params: dict, x: jax.Array) -> jax.Array:
-    return ops.matmul(x, params["w"].astype(x.dtype))
+    return ops.matmul(x, wcast(params["w"], x.dtype))

@@ -68,17 +68,17 @@ def mlstm_fwd(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     nh = cfg.n_heads
     hd = di // nh
 
-    up = ops.matmul(x, params["w_up"].astype(x.dtype))
+    up = ops.matmul(x, layers.wcast(params["w_up"], x.dtype))
     inner, z = up[..., :di], up[..., di:]
     conv = jax.nn.silu(
         _causal_conv(inner.astype(jnp.float32), params["conv_w"]).astype(x.dtype)
     )
-    q = ops.matmul(conv, params["wq"].astype(x.dtype)).reshape(b, t, nh, hd)
-    k = ops.matmul(conv, params["wk"].astype(x.dtype)).reshape(b, t, nh, hd)
-    v = ops.matmul(inner, params["wv"].astype(x.dtype)).reshape(b, t, nh, hd)
+    q = ops.matmul(conv, layers.wcast(params["wq"], x.dtype)).reshape(b, t, nh, hd)
+    k = ops.matmul(conv, layers.wcast(params["wk"], x.dtype)).reshape(b, t, nh, hd)
+    v = ops.matmul(inner, layers.wcast(params["wv"], x.dtype)).reshape(b, t, nh, hd)
 
     gates = (
-        ops.matmul(conv, params["w_if"].astype(x.dtype), out_dtype=jnp.float32)
+        ops.matmul(conv, layers.wcast(params["w_if"], x.dtype), out_dtype=jnp.float32)
         + params["b_if"]
     )
     i_pre, f_pre = gates[..., :nh], gates[..., nh:]  # (B, T, nh)
@@ -101,7 +101,7 @@ def mlstm_fwd(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     h = (h / norm[..., None].astype(h.dtype)).reshape(b, t, di)
     h = layers.rmsnorm(params["skip_norm"], h, cfg.norm_eps) + conv
     h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
-    return ops.matmul(h, params["w_down"].astype(x.dtype))
+    return ops.matmul(h, layers.wcast(params["w_down"], x.dtype))
 
 
 def mlstm_fwd_chunked(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
@@ -126,16 +126,16 @@ def mlstm_fwd_chunked(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     assert t % q_c == 0, (t, q_c)
     nc = t // q_c
 
-    up = ops.matmul(x, params["w_up"].astype(x.dtype))
+    up = ops.matmul(x, layers.wcast(params["w_up"], x.dtype))
     inner, z = up[..., :di], up[..., di:]
     conv = jax.nn.silu(
         _causal_conv(inner.astype(jnp.float32), params["conv_w"]).astype(x.dtype)
     )
-    q = ops.matmul(conv, params["wq"].astype(x.dtype)).reshape(b, t, nh, hd)
-    k = ops.matmul(conv, params["wk"].astype(x.dtype)).reshape(b, t, nh, hd)
-    v = ops.matmul(inner, params["wv"].astype(x.dtype)).reshape(b, t, nh, hd)
+    q = ops.matmul(conv, layers.wcast(params["wq"], x.dtype)).reshape(b, t, nh, hd)
+    k = ops.matmul(conv, layers.wcast(params["wk"], x.dtype)).reshape(b, t, nh, hd)
+    v = ops.matmul(inner, layers.wcast(params["wv"], x.dtype)).reshape(b, t, nh, hd)
     gates = (
-        ops.matmul(conv, params["w_if"].astype(x.dtype), out_dtype=jnp.float32)
+        ops.matmul(conv, layers.wcast(params["w_if"], x.dtype), out_dtype=jnp.float32)
         + params["b_if"]
     )
     i_pre, f_pre = gates[..., :nh], gates[..., nh:]  # (B, T, nh)
@@ -235,7 +235,7 @@ def mlstm_fwd_chunked(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     h = h.reshape(b, t, di).astype(x.dtype)
     h = layers.rmsnorm(params["skip_norm"], h, cfg.norm_eps) + conv
     h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
-    return ops.matmul(h, params["w_down"].astype(x.dtype))
+    return ops.matmul(h, layers.wcast(params["w_down"], x.dtype))
 
 
 def mlstm_auto(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
@@ -269,17 +269,17 @@ def mlstm_step(params: dict, x: jax.Array, cfg: ArchConfig, state: dict):
     nh = cfg.n_heads
     hd = di // nh
 
-    up = ops.matmul(x[:, 0], params["w_up"].astype(x.dtype))
+    up = ops.matmul(x[:, 0], layers.wcast(params["w_up"], x.dtype))
     inner, z = up[..., :di], up[..., di:]
     win = jnp.concatenate([state["conv"], inner[:, None]], axis=1)  # (B, K, di)
     conv = jax.nn.silu(
         jnp.sum(win.astype(jnp.float32) * params["conv_w"], axis=1)
     ).astype(x.dtype)
-    q = ops.matmul(conv, params["wq"].astype(x.dtype)).reshape(b, nh, hd)
-    k = ops.matmul(conv, params["wk"].astype(x.dtype)).reshape(b, nh, hd)
-    v = ops.matmul(inner, params["wv"].astype(x.dtype)).reshape(b, nh, hd)
+    q = ops.matmul(conv, layers.wcast(params["wq"], x.dtype)).reshape(b, nh, hd)
+    k = ops.matmul(conv, layers.wcast(params["wk"], x.dtype)).reshape(b, nh, hd)
+    v = ops.matmul(inner, layers.wcast(params["wv"], x.dtype)).reshape(b, nh, hd)
     gates = (
-        ops.matmul(conv, params["w_if"].astype(x.dtype), out_dtype=jnp.float32)
+        ops.matmul(conv, layers.wcast(params["w_if"], x.dtype), out_dtype=jnp.float32)
         + params["b_if"]
     )
     i_pre, f_pre = gates[..., :nh], gates[..., nh:]
@@ -301,7 +301,7 @@ def mlstm_step(params: dict, x: jax.Array, cfg: ArchConfig, state: dict):
     h = (num / den[..., None]).reshape(b, di).astype(x.dtype)
     h = layers.rmsnorm(params["skip_norm"], h, cfg.norm_eps) + conv
     h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
-    y = ops.matmul(h, params["w_down"].astype(x.dtype))[:, None]
+    y = ops.matmul(h, layers.wcast(params["w_down"], x.dtype))[:, None]
     new_state = {
         "C": c_new,
         "n": n_new,

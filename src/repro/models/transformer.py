@@ -267,8 +267,15 @@ def _head(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
         return frontends.audio_logits(params["lm_head"], x)
     if cfg.tie_embeddings:
         return layers.unembed(params["embed"], x)
+    w = params["lm_head"]["w"]
+    if hasattr(w, "dequantize"):  # weight-only quantized head (QArray):
+        # the einsum below exists for its sharding-constraint pattern, so
+        # the head dequantizes here rather than detouring through matmul.
+        w = w.dequantize(x.dtype)
+    else:
+        w = w.astype(x.dtype)
     logits = jnp.einsum(
-        "bsd,dv->bsv", x, params["lm_head"]["w"].astype(x.dtype),
+        "bsd,dv->bsv", x, w,
         preferred_element_type=jnp.float32,
     )
     # batch+vocab sharded, and (via the constraint's transpose rule) the

@@ -1,0 +1,71 @@
+"""repro.quant: block-scaled int8/fp8 quantization, kernel to serving.
+
+Pieces (DESIGN.md §10):
+
+  * ``qarray``   -- the block-scaled ``QArray`` pytree + quantize/dequantize;
+  * ``params``   -- weight-only quantization of model param pytrees;
+  * the activation-quantization *policy* below: a contextvar deciding
+    whether ``core.ops.matmul`` quantizes activations on the fly when the
+    weight side is already a QArray (w8a8) or leaves them wide (w8a16).
+
+The quantized systolic kernel itself lives with its fp siblings in
+``repro.kernels.systolic``; the serving KV-cache quantization in
+``repro.serving.kvpool``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+from repro.quant.params import count_quantized, quantize_params
+from repro.quant.qarray import (
+    DEFAULT_BLOCK_K,
+    QDTYPES,
+    QArray,
+    canonical_qdtype,
+    dequantize,
+    quantize,
+    quantize_act,
+    quantize_weight,
+)
+
+__all__ = [
+    "DEFAULT_BLOCK_K",
+    "QDTYPES",
+    "QArray",
+    "act_qdtype",
+    "canonical_qdtype",
+    "count_quantized",
+    "dequantize",
+    "quantize",
+    "quantize_act",
+    "quantize_params",
+    "quantize_weight",
+    "use_act_quant",
+]
+
+# ---------------------------------------------------------------------------
+# Activation-quantization policy (the a8 half of w8a8).
+# ---------------------------------------------------------------------------
+
+_ACT_QDTYPE = contextvars.ContextVar("repro_act_qdtype", default=None)
+
+
+def act_qdtype() -> str | None:
+    """Quant dtype for on-the-fly activation quantization, or None (w8a16:
+    activations stay wide, QArray weights dequantize at the GEMM)."""
+    return _ACT_QDTYPE.get()
+
+
+@contextlib.contextmanager
+def use_act_quant(qdtype: str | None):
+    """Enable dynamic per-token activation quantization inside the scope
+    (``qdtype`` "int8"/"fp8"); ``None`` restores weight-only behaviour."""
+    if qdtype is not None:
+        qdtype = canonical_qdtype(qdtype)
+    token = _ACT_QDTYPE.set(qdtype)
+    try:
+        yield
+    finally:
+        _ACT_QDTYPE.reset(token)

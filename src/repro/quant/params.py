@@ -1,0 +1,103 @@
+"""Weight-only quantization of model parameter pytrees.
+
+``quantize_params`` walks a params dict (as produced by
+``transformer.init_model``) and replaces dense projection weights with
+block-scaled ``QArray``s; everything a quantized weight flows through
+(``core.ops.matmul``, ``layers``/``attention`` projections) understands the
+QArray and dequantizes -- or runs the quantized kernel -- at the call site.
+
+What gets quantized: 2-D (and leading-stacked 3-D) float weights under the
+known projection keys.  What never does:
+
+  * norms / biases / 1-D leaves (no GEMM flows through them);
+  * the embedding ``table`` (consumed by a gather, not a matmul; tied
+    unembedding would also transpose the quant axes);
+  * MLA's ``wkv_b`` (the absorbed decode path reshapes it into per-head
+    matrices and contracts them by einsum, not through ``ops.matmul``);
+  * MoE expert weights (they flow through the *grouped* kernel, which has no
+    quantized variant yet -- see ROADMAP open items): any subtree holding a
+    ``router`` key is skipped wholesale.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.quant.qarray import DEFAULT_BLOCK_K, QArray, quantize_weight
+
+# Dense projection keys across all families (attention, MLA, FFN, heads).
+# NOT here: "wkv_b" (absorbed-decode einsum, see module docstring), "table"
+# (gather), frontends' "w1"/"w2"/"tables" (projector/codec specials).
+WEIGHT_KEYS = frozenset(
+    {
+        "wq",
+        "wk",
+        "wv",
+        "wo",
+        "wq_a",
+        "wq_b",
+        "wkv_a",
+        "w_gate",
+        "w_up",
+        "w_down",
+        "w_if",
+        "w",
+    }
+)
+
+
+def _quantizable(key: str, leaf: Any) -> bool:
+    if not (
+        key in WEIGHT_KEYS
+        and hasattr(leaf, "ndim")
+        and jnp.issubdtype(leaf.dtype, jnp.floating)
+    ):
+        return False
+    # "w" is the generic dense key: the 2-D lm_head/dense projection
+    # quantizes, but the audio frontend's stacked (ncb, d, V) head -- also
+    # keyed "w" -- contracts by einsum and stays wide.
+    if key == "w":
+        return leaf.ndim == 2
+    return leaf.ndim in (2, 3)
+
+
+def quantize_params(
+    params: Any, qdtype: str = "int8", *, block_k: int = DEFAULT_BLOCK_K
+) -> Any:
+    """Replace dense projection weights with QArrays (weight-only quant)."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "router" in node:  # MoE expert block: grouped kernel, skip
+                return node
+            return {
+                k: (
+                    quantize_weight(v, qdtype, block_k=block_k)
+                    if _quantizable(k, v)
+                    else walk(v)
+                )
+                for k, v in node.items()
+            }
+        return node
+
+    return walk(params)
+
+
+def count_quantized(params: Any) -> tuple[int, int]:
+    """(n_quantized_leaves, quantized_value_bytes) -- for logging."""
+    n = 0
+    nbytes = 0
+
+    def walk(node):
+        nonlocal n, nbytes
+        if isinstance(node, QArray):
+            n += 1
+            nbytes += node.values.size * node.values.dtype.itemsize
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+
+    walk(params)
+    return n, nbytes

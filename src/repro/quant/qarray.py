@@ -1,0 +1,211 @@
+"""Block-scaled quantized arrays: the DSP-packing analogue (DESIGN.md §10).
+
+The paper's Stratix 10 DSP blocks natively pack *two* narrow fixed-point
+multiplies per block in integer mode -- the same silicon that does one fp32
+FMA does two int18 MACs, doubling throughput at the same clock.  The MXU
+analogue is int8 (and fp8) passes at ~2x the bf16 peak.  This module is the
+storage half of that trick: a ``QArray`` holds narrow values plus fp32
+per-block scales, symmetric (zero-point-free) so the quantized matmul stays
+a plain integer dot followed by a scale multiply.
+
+Layout contract
+---------------
+``block = (qr, qc)`` tiles the **last two** axes of the array; every leading
+axis gets per-index scales (so a stacked (L, K, N) weight quantizes each
+layer independently, and ``lax.scan`` slicing the leading axis slices values
+and scales coherently -- QArray is a registered pytree whose aux data is
+shape-independent of the leading axes).  ``0`` means "whole axis":
+
+  * activations (M, K):  block (1, qk)  -> per-row x per-k-block scales
+  * weights    (K, N):  block (qk, 1)  -> per-k-block x per-column scales
+  * per-channel only:   block (0, 1) / (1, 0)
+
+``qk`` defaults to 128 -- one MXU lane tile, so scale blocks land on the
+systolic tile grid and the kernel's k-sweep (bk a multiple of 128, clamped
+to qk) never straddles a scale boundary.
+
+Quantization is symmetric round-to-nearest: ``scale = absmax / qmax`` per
+block and ``q = clip(round(x / scale))``.  All-zero blocks get scale 1 so
+dequantization never divides by zero (their values are exactly 0 anyway).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Default scale granularity along the contraction axis: the MXU lane tile,
+# so scale blocks align with the systolic kernel's k-sweep.
+DEFAULT_BLOCK_K = 128
+
+# qdtype name -> (storage dtype, qmax).  fp8 uses e4m3 (the inference
+# format); its "qmax" is the largest finite value, so scaled inputs span
+# the full exponent range.
+_QDTYPES = {
+    "int8": (jnp.int8, 127.0),
+    "fp8": (jnp.float8_e4m3fn, 448.0),
+}
+
+QDTYPES = tuple(_QDTYPES)
+
+
+def qdtype_info(qdtype: str):
+    """(storage dtype, qmax) for a quantized dtype name."""
+    try:
+        return _QDTYPES[qdtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown quant dtype {qdtype!r}; valid: {QDTYPES}"
+        ) from None
+
+
+def canonical_qdtype(qdtype: str) -> str:
+    """Map aliases ("float8_e4m3fn", numpy names) onto the registry keys."""
+    if qdtype in _QDTYPES:
+        return qdtype
+    if str(qdtype).startswith("float8"):
+        return "fp8"
+    if str(qdtype) in ("int8", "i8"):
+        return "int8"
+    raise ValueError(f"unknown quant dtype {qdtype!r}; valid: {QDTYPES}")
+
+
+def is_quant_dtype(dtype) -> bool:
+    """True for any spelling of the narrow quantized dtypes (registry keys,
+    numpy/jax names, dtype objects).  The ONE classification every consumer
+    -- perf model, tuner, dispatch -- should use."""
+    name = str(dtype)
+    return name in _QDTYPES or name.startswith("float8")
+
+
+def storage_dtype_name(dtype) -> str:
+    """Canonical numpy name of the storage dtype ("int8", "float8_e4m3fn")
+    for any quant-dtype spelling -- what cache keys and array dtypes carry."""
+    storage, _ = qdtype_info(canonical_qdtype(str(dtype)))
+    return str(jnp.dtype(storage))
+
+
+def _resolve_block(shape, block) -> tuple[int, int]:
+    """Normalise ``block`` against the last two axes (0/None = whole axis)."""
+    if len(shape) < 2:
+        raise ValueError(f"QArray needs ndim >= 2, got shape {shape}")
+    r, c = shape[-2], shape[-1]
+    qr, qc = block
+    qr = r if not qr else min(int(qr), r)
+    qc = c if not qc else min(int(qc), c)
+    if qr < 1 or qc < 1:
+        raise ValueError(f"invalid quant block {block}")
+    return qr, qc
+
+
+def _block_reduce_absmax(x: jax.Array, qr: int, qc: int) -> jax.Array:
+    """Per-block absmax over the last two axes: (..., R, C) ->
+    (..., ceil(R/qr), ceil(C/qc))."""
+    *lead, r, c = x.shape
+    rp = -(-r // qr) * qr
+    cp = -(-c // qc) * qc
+    if (rp, cp) != (r, c):
+        pad = [(0, 0)] * len(lead) + [(0, rp - r), (0, cp - c)]
+        x = jnp.pad(x, pad)
+    x = x.reshape(*lead, rp // qr, qr, cp // qc, qc)
+    return jnp.max(jnp.abs(x), axis=(-3, -1))
+
+
+def _expand_scales(scales: jax.Array, qr: int, qc: int, r: int, c: int):
+    """Broadcast per-block scales back to element resolution (..., R, C)."""
+    s = jnp.repeat(scales, qr, axis=-2)[..., :r, :]
+    return jnp.repeat(s, qc, axis=-1)[..., :c]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QArray:
+    """Block-scaled quantized array (symmetric, zero-point-free).
+
+    ``values``: int8 or fp8, the original shape.  ``scales``: fp32 with the
+    last two axes reduced to block counts.  ``block``: the (qr, qc) tile of
+    the last two axes the scales apply to (element counts, already clamped
+    to the axis lengths).  ``qdtype``: registry name ("int8" | "fp8").
+    """
+
+    values: jax.Array
+    scales: jax.Array
+    block: tuple[int, int]
+    qdtype: str
+
+    # -- pytree protocol (block/qdtype are static aux data, so scan/vmap
+    # slicing leading axes keeps values and scales coherent) --------------
+    def tree_flatten(self):
+        return (self.values, self.scales), (self.block, self.qdtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        block, qdtype = aux
+        values, scales = children
+        return cls(values=values, scales=scales, block=block, qdtype=qdtype)
+
+    # -- array-ish surface -------------------------------------------------
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def ndim(self):
+        return self.values.ndim
+
+    def astype(self, dtype):
+        """No-op passthrough: the compute dtype is chosen at dequantize
+        time.  Exists so call sites like ``params["w"].astype(dt)`` work
+        unchanged on quantized params."""
+        del dtype
+        return self
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        qr, qc = self.block
+        r, c = self.values.shape[-2:]
+        s = _expand_scales(self.scales, qr, qc, r, c)
+        return (self.values.astype(jnp.float32) * s).astype(dtype)
+
+
+def quantize(
+    x: jax.Array,
+    qdtype: str = "int8",
+    *,
+    block: tuple[int, int] = (1, DEFAULT_BLOCK_K),
+) -> QArray:
+    """Symmetric block-scaled quantization over the last two axes."""
+    qdtype = canonical_qdtype(qdtype)
+    storage, qmax = qdtype_info(qdtype)
+    qr, qc = _resolve_block(x.shape, block)
+    x = x.astype(jnp.float32)
+    absmax = _block_reduce_absmax(x, qr, qc)
+    scales = jnp.where(absmax > 0, absmax / qmax, 1.0).astype(jnp.float32)
+    r, c = x.shape[-2:]
+    inv = 1.0 / _expand_scales(scales, qr, qc, r, c)
+    scaled = x * inv
+    if qdtype == "int8":
+        values = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(storage)
+    else:
+        values = jnp.clip(scaled, -qmax, qmax).astype(storage)
+    return QArray(values=values, scales=scales, block=(qr, qc), qdtype=qdtype)
+
+
+def dequantize(q: QArray, dtype=jnp.float32) -> jax.Array:
+    return q.dequantize(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GEMM-operand conveniences (the shapes core.ops/kernels dispatch with).
+# ---------------------------------------------------------------------------
+
+
+def quantize_act(x: jax.Array, qdtype: str = "int8", *, block_k: int = DEFAULT_BLOCK_K):
+    """(…, M, K) activations: per-row x per-k-block scales."""
+    return quantize(x, qdtype, block=(1, block_k))
+
+
+def quantize_weight(w: jax.Array, qdtype: str = "int8", *, block_k: int = DEFAULT_BLOCK_K):
+    """(…, K, N) weights: per-k-block x per-column scales."""
+    return quantize(w, qdtype, block=(block_k, 1))

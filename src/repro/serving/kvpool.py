@@ -35,6 +35,68 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# ---------------------------------------------------------------------------
+# Quantized pool storage (kv8, DESIGN.md §10).
+#
+# With ``quantize_kv`` the pool's *resident* form is int8 values plus fp32
+# per-(layer, slot[, head]) scales; the fp pytree the engine's decode step
+# consumes is materialised on access and re-quantized on assignment, so the
+# scheduler drives the same ``pool.cache`` interface either way.  Scales are
+# symmetric absmax over each slot's sequence/feature dims -- freeing a slot
+# zeroes its floats, so a freed slot quantizes to exact zeros and stays
+# unreachable behind the same ``pos = -1`` validity mask that protects the
+# fp pool (quantization noise on masked rows is never observable).
+# ---------------------------------------------------------------------------
+
+_KV_QMAX = 127.0
+_KV_KEYS = frozenset({"qv", "qs"})
+
+
+def _kv_quantizable(leaf: jax.Array) -> bool:
+    """Float cache state with a slot axis: attention K/V (and MLA latents).
+    Integer leaves are the ``pos`` masks and always stay exact."""
+    return jnp.issubdtype(leaf.dtype, jnp.floating) and leaf.ndim >= 3
+
+
+def _kv_scale_axes(leaf: jax.Array) -> tuple[int, ...]:
+    """Reduce absmax over everything except layer (0), slot (1), and --
+    for (L, B, S, H, hd) attention caches -- the head axis (3): the
+    per-head-per-slot scale granularity."""
+    keep = {0, 1} | ({3} if leaf.ndim >= 5 else set())
+    return tuple(i for i in range(leaf.ndim) if i not in keep)
+
+
+def _is_qleaf(node: Any) -> bool:
+    return isinstance(node, dict) and set(node) == _KV_KEYS
+
+
+@jax.jit
+def quantize_kv(cache: Any) -> Any:
+    """fp cache pytree -> quantized pool form ({"qv": int8, "qs": fp32})."""
+
+    def q(leaf):
+        if not _kv_quantizable(leaf):
+            return leaf
+        x = leaf.astype(jnp.float32)
+        absmax = jnp.max(jnp.abs(x), axis=_kv_scale_axes(leaf), keepdims=True)
+        qs = jnp.where(absmax > 0, absmax / _KV_QMAX, 1.0)
+        qv = jnp.clip(jnp.round(x / qs), -_KV_QMAX, _KV_QMAX).astype(jnp.int8)
+        return {"qv": qv, "qs": qs}
+
+    return jax.tree.map(q, cache)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def dequantize_kv(qcache: Any, dtype: str) -> Any:
+    """Quantized pool form -> fp cache pytree at ``dtype``."""
+
+    def dq(node):
+        if _is_qleaf(node):
+            return (node["qv"].astype(jnp.float32) * node["qs"]).astype(dtype)
+        return node
+
+    return jax.tree.map(dq, qcache, is_leaf=_is_qleaf)
+
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_slot(pool: Any, one: Any, slot: jax.Array) -> Any:
@@ -82,20 +144,50 @@ def clear_slots(cache: Any, slot_mask: jax.Array, batch: int) -> Any:
 
 
 class KVPool:
-    """Fixed-size pool of KV/state cache slots shared by in-flight requests."""
+    """Fixed-size pool of KV/state cache slots shared by in-flight requests.
 
-    def __init__(self, model, n_slots: int, max_len: int, dtype=None):
+    ``quantize_kv=True`` keeps the resident pool in int8 with per-head-per-
+    slot fp32 scales (kv8): the ``cache`` property dequantizes on read and
+    re-quantizes on write, so every consumer -- decode steps, slot
+    gather/scatter, slot clearing -- sees the usual fp pytree while the
+    pool's steady-state memory is ~1/2 (bf16) to ~1/4 (fp32) of the fp
+    form.  Only float leaves with a slot axis quantize; the integer ``pos``
+    validity masks stay exact, so the freed/mid-prefill-slot invariants are
+    unchanged.
+    """
+
+    def __init__(
+        self, model, n_slots: int, max_len: int, dtype=None, quantize_kv_cache: bool = False
+    ):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
         self.dtype = dtype or jnp.dtype(model.cfg.dtype)
+        self.quantize_kv = quantize_kv_cache
+        self._qcache = None
+        self._cache = None
         self.cache = model.init_cache(n_slots, max_len, self.dtype)
         self.positions = np.full((n_slots,), -1, np.int64)
         # LIFO free list: the most recently freed slot is reused first, which
         # keeps the active slots dense in low indices under light load.
         self._free = list(range(n_slots - 1, -1, -1))
+
+    # -- resident storage (fp, or int8 + scales under kv8) -------------------
+
+    @property
+    def cache(self) -> Any:
+        if self.quantize_kv:
+            return dequantize_kv(self._qcache, str(self.dtype))
+        return self._cache
+
+    @cache.setter
+    def cache(self, new: Any) -> None:
+        if self.quantize_kv:
+            self._qcache = quantize_kv(new)
+        else:
+            self._cache = new
 
     # -- bookkeeping ---------------------------------------------------------
 

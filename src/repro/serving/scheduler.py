@@ -183,6 +183,7 @@ class ContinuousScheduler:
         chunk_size: int = 128,
         chunk_budget: int = 1,
         precompile: bool = True,
+        quantize_kv: bool = False,
     ):
         if policy not in self.POLICIES:
             raise ValueError(f"policy must be one of {self.POLICIES}, got {policy!r}")
@@ -198,6 +199,17 @@ class ContinuousScheduler:
                 "chunkable; falling back to monolithic prefill"
             )
             chunked_prefill = False
+        if quantize_kv and engine.cfg.family not in ("dense", "moe", "audio", "vlm"):
+            # SSM/hybrid *state* leaves are running accumulators with no pos
+            # mask; requantizing them every step compounds error unboundedly,
+            # so kv8 covers the attention families only (ROADMAP open item).
+            import warnings
+
+            warnings.warn(
+                f"{engine.cfg.name}: family {engine.cfg.family!r} has "
+                "unmasked state caches; kv8 disabled for this run"
+            )
+            quantize_kv = False
         self.engine = engine
         self.policy = policy
         self.chunked_prefill = chunked_prefill
@@ -205,8 +217,13 @@ class ContinuousScheduler:
         self.chunk_size = min(chunk_size, engine.attn_cache_len())
         self.chunk_budget = chunk_budget
         self.precompile = precompile
+        self.quantize_kv = quantize_kv
         self.pool = KVPool(
-            engine.model, engine.scfg.batch, engine.scfg.max_len, dtype
+            engine.model,
+            engine.scfg.batch,
+            engine.scfg.max_len,
+            dtype,
+            quantize_kv_cache=quantize_kv,
         )
         cfg = engine.cfg
         tok_shape = (self.pool.n_slots, 1)

@@ -72,7 +72,13 @@ def autotune(
     cache = cache or default_cache()
     # Canonicalise the dtype ("float32", not "<class 'numpy.float32'>") so
     # the fitter's byte model is right and the cache key matches the
-    # str(array.dtype) the kernel dispatchers look up with.
+    # str(array.dtype) the kernel dispatchers look up with.  The "fp8"
+    # convenience alias resolves to the e4m3 storage dtype the quant kernel
+    # actually runs (and keys the cache with).
+    if str(dtype) == "fp8":
+        from repro.quant.qarray import storage_dtype_name
+
+        dtype = storage_dtype_name(dtype)
     dtype = str(jnp.dtype(dtype))
     if measure_fn is None and backend not in measure_mod.MEASURABLE_BACKENDS:
         raise ValueError(
@@ -95,10 +101,7 @@ def autotune(
         if hit is not None:
             return TuneResult(key=key, winner=hit, cache_hit=True)
 
-    in_bytes = hw.DTYPE_BYTES.get(dtype, 2)
-    cands = cand_mod.generate(
-        m, n, k, in_dtype_bytes=in_bytes, chip=chip, top_k=top_k, tp=tp
-    )
+    cands = cand_mod.generate(m, n, k, dtype=dtype, chip=chip, top_k=top_k, tp=tp)
 
     if measure_fn is None:
         # For tp > 1 the measurable unit is the per-shard kernel of one ring

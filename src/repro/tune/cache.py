@@ -153,13 +153,29 @@ class PlanCache:
         entries: dict[str, TunedPlan] = {}
         try:
             raw = json.loads(self.path.read_text())
-            if isinstance(raw, dict) and raw.get("version") == SCHEMA_VERSION:
-                for key, val in raw.get("entries", {}).items():
-                    entries[key] = TunedPlan.from_json(val)
-        except (OSError, ValueError, KeyError, TypeError, AttributeError):
-            # Missing or corrupt cache is equivalent to an empty one; the
-            # tuner will simply re-measure and rewrite it.
-            entries = {}
+        except (OSError, ValueError):
+            # Missing or unparseable cache is equivalent to an empty one;
+            # the tuner will simply re-measure and rewrite it.
+            return entries
+        if not isinstance(raw, dict) or raw.get("version") != SCHEMA_VERSION:
+            # Unknown schema version -- older (v1: no tp key segment) or
+            # newer than this build -- reads as empty rather than raising
+            # or mis-keying: stale winners simply re-measure.  Note the
+            # first store() from this build then rewrites the file at
+            # SCHEMA_VERSION, discarding the unknown-version entries --
+            # acceptable because every entry is re-derivable by measuring.
+            return entries
+        items = raw.get("entries", {})
+        if not isinstance(items, dict):
+            return entries
+        for key, val in items.items():
+            try:
+                entries[key] = TunedPlan.from_json(val)
+            except (KeyError, TypeError, ValueError):
+                # One hand-edited/corrupt entry must not discard the rest
+                # of the cache (it used to: the whole loop sat inside one
+                # try).  Skip it; that problem re-measures.
+                continue
         return entries
 
     def _save_locked(self) -> None:

@@ -46,7 +46,8 @@ def generate(
     n: int,
     k: int,
     *,
-    in_dtype_bytes: int = 2,
+    dtype: str | None = None,
+    in_dtype_bytes: int | None = None,
     chip: hw.Chip | str | None = None,
     bms=DEFAULT_BMS,
     bns=DEFAULT_BNS,
@@ -63,6 +64,11 @@ def generate(
     has something to measure.  ``tp > 1`` enumerates the per-shard problem
     of the tp-way collective matmul instead, with mesh-unbalanced candidates
     (collective bytes that cannot hide under compute) ranked last.
+
+    ``dtype`` (canonical numpy name) sizes the streams from the hw table
+    and, for the quant dtypes (int8/fp8), prices the candidates against the
+    2x narrow peak with scale-sidecar traffic included -- so int8 and bf16
+    sweeps of the same problem rank (and cache) independently.
     """
     chip = hw.get_chip(chip)
     if m % tp or n % tp:
@@ -71,11 +77,11 @@ def generate(
         )
     records = dse.explore(
         m, n, k, bms=bms, bns=bns, bks=bks,
-        in_dtype_bytes=in_dtype_bytes, chip=chip, tps=(tp,),
+        in_dtype=dtype, in_dtype_bytes=in_dtype_bytes, chip=chip, tps=(tp,),
     )
     survivors = [r for r in records if r.fits]
     if not survivors:
-        survivors = [_heuristic_record(m, n, k, in_dtype_bytes, chip, tp)]
+        survivors = [_heuristic_record(m, n, k, dtype, in_dtype_bytes, chip, tp)]
     survivors.sort(
         key=lambda r: (not r.mesh_balanced, r.analytical_us, -r.arithmetic_intensity)
     )
@@ -84,7 +90,9 @@ def generate(
     return [Candidate(record=r, rank=i) for i, r in enumerate(survivors)]
 
 
-def _heuristic_record(m, n, k, in_dtype_bytes, chip, tp: int = 1) -> dse.DSERecord:
+def _heuristic_record(
+    m, n, k, dtype, in_dtype_bytes, chip, tp: int = 1
+) -> dse.DSERecord:
     """The clamped balance-equation plan as a degenerate candidate set.
 
     Delegates to the systolic dispatcher's own clamp so the tuner's fallback
@@ -95,10 +103,17 @@ def _heuristic_record(m, n, k, in_dtype_bytes, chip, tp: int = 1) -> dse.DSEReco
     from repro.core.blocking import BlockPlan
     from repro.kernels.systolic.ops import _clamp_plan
 
+    qbk = dse._quant_block_k(dtype, None)
+    plan_kw = dict(
+        in_dtype=dtype,
+        in_dtype_bytes=in_dtype_bytes or 2,
+        quant_block_k=qbk,
+        out_dtype_bytes=2 if qbk else None,
+    )
     sm, sn = m // tp, n // tp
-    bm, bn, bk = _clamp_plan(sm, sn, k, None, chip)
-    p = BlockPlan(sm, sn, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes)
-    mesh_plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype_bytes=in_dtype_bytes, tp=tp)
+    bm, bn, bk = _clamp_plan(sm, sn, k, None, chip, in_dtype=dtype)
+    p = BlockPlan(sm, sn, k, bm, bn, bk, **plan_kw)
+    mesh_plan = BlockPlan(m, n, k, bm, bn, bk, tp=tp, **plan_kw)
     return dse.DSERecord(
         bm=bm,
         bn=bn,
@@ -113,7 +128,9 @@ def _heuristic_record(m, n, k, in_dtype_bytes, chip, tp: int = 1) -> dse.DSEReco
         m=m,
         n=n,
         k=k,
-        in_dtype_bytes=in_dtype_bytes,
+        in_dtype_bytes=p.in_dtype_bytes,
+        in_dtype=dtype,
+        quant_block_k=qbk,
         tp=tp,
         mesh_balanced=mesh_plan.mesh_balanced(chip),
     )

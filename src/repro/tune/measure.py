@@ -66,9 +66,19 @@ def _time_callable(fn, *, warmup: int, repeats: int) -> tuple[float, float]:
 
 def _operands(m: int, n: int, k: int, dtype) -> tuple[jax.Array, jax.Array]:
     ka, kb = jax.random.split(jax.random.PRNGKey(0))
-    a = jax.random.normal(ka, (m, k), jnp.float32).astype(dtype)
-    b = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        a = jax.random.randint(ka, (m, k), -127, 128, jnp.int32).astype(dtype)
+        b = jax.random.randint(kb, (k, n), -127, 128, jnp.int32).astype(dtype)
+    else:
+        a = jax.random.normal(ka, (m, k), jnp.float32).astype(dtype)
+        b = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
     return jax.block_until_ready(a), jax.block_until_ready(b)
+
+
+def _is_quant_dtype(dtype) -> bool:
+    from repro.quant.qarray import is_quant_dtype
+
+    return is_quant_dtype(jnp.dtype(dtype))
 
 
 # Kernel families the default measurement loop can drive.  "pallas-grouped"
@@ -115,7 +125,7 @@ def measure_matmul(
 
     from repro.core.blocking import BlockPlan
 
-    plan = BlockPlan(m, n, k, bm, bn, bk)
+    plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype=str(dtype))
     interpret = method == "interpret-wall"
 
     if backend == "reference":
@@ -142,6 +152,26 @@ def measure_matmul(
         def run():
             y = grouped_ops.grouped_matmul(
                 xe, we, bc=bm, bn=bn, bk=bk, interpret=interpret
+            )
+            return jax.block_until_ready(y)
+
+    elif _is_quant_dtype(dtype):
+        # Quantized systolic path: time the narrow kernel at this geometry
+        # with pre-built QArrays (scale construction is a load-time cost,
+        # not a per-GEMM one, so it stays outside the timed region).
+        from repro.kernels.systolic import ops as systolic_ops
+        from repro.quant.qarray import QArray, quantize_act, quantize_weight
+
+        qd = "int8" if jnp.dtype(dtype) == jnp.int8 else "fp8"
+        ka, kb = jax.random.split(jax.random.PRNGKey(0))
+        af = jax.random.normal(ka, (m, k), jnp.float32)
+        bf = jax.random.normal(kb, (k, n), jnp.float32)
+        qa: QArray = jax.block_until_ready(quantize_act(af, qd))
+        qb: QArray = jax.block_until_ready(quantize_weight(bf, qd))
+
+        def run():
+            y = systolic_ops.quant_matmul(
+                qa, qb, activation=activation, plan=plan, interpret=interpret
             )
             return jax.block_until_ready(y)
 
@@ -173,9 +203,17 @@ def _measure_xla_proxy(m, n, k, bm, bn, bk, *, dtype, repeats, warmup) -> Measur
         -(m // -eff_bm) * -(n // -eff_bn) * -(k // -eff_bk)
     )  # ceil-div grid volume
     a, b = _operands(eff_bm, eff_bn, eff_bk, dtype)
+    if jnp.dtype(dtype) == jnp.int8:
+        pref = jnp.int32  # the narrow integer dot the quant kernel runs
+    else:
+        pref = jnp.float32
+        if str(jnp.dtype(dtype)).startswith("float8"):
+            # fp8 dots upcast on hosts without native f8 (same as the
+            # kernel's interpret path), keeping the block-shape ordering.
+            a, b = a.astype(jnp.float32), b.astype(jnp.float32)
     dot = jax.jit(
         lambda x, y: jax.lax.dot_general(
-            x, y, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            x, y, (((1,), (0,)), ((), ())), preferred_element_type=pref
         )
     )
 

@@ -200,6 +200,69 @@ def test_kvpool_pos_vector_drives_decode():
     assert pool.positions[slot] == 6
 
 
+def _all_pos_masked(cache_one) -> bool:
+    """Every integer (pos) leaf of a batch-1 cache view is fully -1."""
+    ok = True
+    for leaf in jax.tree.leaves(cache_one):
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            ok = ok and bool(jnp.all(leaf == -1))
+    return ok
+
+
+def test_kvpool_gather_freed_slot_stays_masked():
+    """``gather_slot`` of a freed slot yields a view with every position
+    ``pos = -1``: the invariant that makes freeing a *masking* operation
+    (stale keys unreachable) rather than only a zeroing one."""
+    eng, cfg = _engine(batch=2, max_len=32)
+    pool = KVPool(eng.model, 2, 32, jnp.float32)
+    slot = pool.alloc()
+    prompt = make_batch(cfg, batch=1, seq=6, kind="prefill", seed=11)
+    _, cache_one = eng.prefill_request(prompt)
+    pool.write_prefill(slot, cache_one, 6)
+    assert not _all_pos_masked(pool.gather_slot(slot))  # live: positions set
+    pool.free(slot)
+    view = pool.gather_slot(slot)
+    assert _all_pos_masked(view)
+    for leaf in jax.tree.leaves(view):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert float(jnp.max(jnp.abs(leaf))) == 0.0
+
+
+def test_kvpool_write_slot_next_pos_none_keeps_host_mask():
+    """``write_slot(..., next_pos=None)`` mid-prefill lands K/V rows in the
+    pool but keeps the HOST position -1, so the co-scheduled vector-pos
+    decode still sees the slot as empty (guards the invariant the chunked
+    prefill of PR 4 leans on)."""
+    eng, cfg = _engine(batch=2, max_len=32)
+    pool = KVPool(eng.model, 2, 32, jnp.float32)
+    slot = pool.alloc()
+    prompt = make_batch(cfg, batch=1, seq=6, kind="prefill", seed=12)
+    _, cache_one = eng.prefill_request(prompt)
+
+    pool.write_slot(slot, cache_one, next_pos=None)
+    # device rows landed ...
+    np.testing.assert_array_equal(
+        np.asarray(pool.cache["layers"]["k"][:, slot]),
+        np.asarray(cache_one["layers"]["k"][:, 0]),
+    )
+    # ... but the host mask still reports the slot empty
+    assert pool.positions[slot] == -1
+    assert int(np.asarray(pool.pos_vector())[slot]) == -1
+
+    # a decode step over the pool leaves the mid-prefill slot's cache rows
+    # bit-for-bit untouched (its query position is -1 -> inert row)
+    before = jax.tree.map(lambda a: np.asarray(a), pool.cache)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    _, pool.cache = eng.decode_slots(tok, pool.cache, pool.pos_vector())
+    after = pool.cache
+    for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(b, np.asarray(a))
+
+    # finishing the prefill with a real next_pos flips the slot live
+    pool.write_slot(slot, cache_one, next_pos=6)
+    assert pool.positions[slot] == 6
+
+
 # ---------------------------------------------------------------------------
 # Decode-shape plan consultation (repro.tune cache)
 # ---------------------------------------------------------------------------

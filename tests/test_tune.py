@@ -96,6 +96,71 @@ def test_cache_non_dict_json_and_merge_on_write(tmp_path):
     assert final.lookup(key_a) == plan and final.lookup(key_b) == plan
 
 
+@pytest.mark.parametrize("dtype", ["int8", "float8_e4m3fn"])
+def test_cache_quant_dtype_keys_round_trip(tmp_path, dtype):
+    """int8/fp8 cache keys persist and reload independently of the bf16
+    entry for the same geometry (the dtype segment keys quantized plans)."""
+    path = tmp_path / "plans.json"
+    plan_q = TunedPlan(256, 256, 128, 3.0, 2.5, "interpret-wall", repeats=2)
+    plan_bf = TunedPlan(512, 512, 512, 9.0, 8.0, "interpret-wall", repeats=2)
+    key_q = CacheKey("pallas-systolic", "tpu_v5e", 512, 512, 512, dtype)
+    key_bf = CacheKey("pallas-systolic", "tpu_v5e", 512, 512, 512, "bfloat16")
+    c = PlanCache(path)
+    c.store(key_q, plan_q)
+    c.store(key_bf, plan_bf)
+    reloaded = PlanCache(path)
+    assert reloaded.lookup(key_q) == plan_q
+    assert reloaded.lookup(key_bf) == plan_bf
+    assert dtype in key_q.encode()
+
+
+def test_lookup_block_ignores_v1_blob(tmp_path, monkeypatch):
+    """Regression: a hand-written v1 cache file (no tp key segment) reads as
+    empty -- lookup_block returns None instead of raising or mis-keying."""
+    path = tmp_path / "plans.json"
+    v1 = {
+        "version": 1,
+        "entries": {
+            "pallas-systolic|tpu_v5e|512|512|512|bfloat16|none": {
+                "bm": 256, "bn": 256, "bk": 256,
+                "mean_us": 5.0, "best_us": 4.0, "method": "stub",
+            }
+        },
+    }
+    path.write_text(json.dumps(v1))
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(path))
+    tune_cache.reset_default_cache()
+    try:
+        hit = tune_cache.lookup_block(
+            "pallas-systolic", "tpu_v5e", 512, 512, 512, "bfloat16"
+        )
+        assert hit is None
+        assert len(PlanCache(path)) == 0
+    finally:
+        tune_cache.reset_default_cache()
+
+
+def test_cache_skips_corrupt_entry_keeps_rest(tmp_path):
+    """One malformed entry must not discard the whole cache file."""
+    path = tmp_path / "plans.json"
+    good_key = CacheKey("pallas-systolic", "tpu_v5e", 128, 128, 128, "int8")
+    blob = {
+        "version": tune_cache.SCHEMA_VERSION,
+        "entries": {
+            "hand|edited|garbage": {"bm": "not-an-int"},
+            good_key.encode(): {
+                "bm": 128, "bn": 128, "bk": 128,
+                "mean_us": 1.0, "best_us": 1.0, "method": "stub",
+                "repeats": 1,
+            },
+        },
+    }
+    path.write_text(json.dumps(blob))
+    c = PlanCache(path)
+    assert len(c) == 1
+    assert c.lookup(good_key) == TunedPlan(128, 128, 128, 1.0, 1.0, "stub", 1)
+
+
 def test_measure_rejects_activation_on_backends_without_epilogue():
     from repro.tune import measure_matmul
 
