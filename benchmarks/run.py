@@ -22,6 +22,10 @@
   quant     quantized vs bf16 GEMM (dtype-aware model + measured numbers;
             asserts the model predicts int8 >= 1.5x bf16) and fp vs
             w8a16/kv8 serve tok/s on one small trace; BENCH JSON lines
+  obs       telemetry self-measurement: serve trace with recording disabled
+            vs enabled (overhead budget < 3% tok/s), plus the enabled run's
+            MFU / roofline residual / plan hit rate / TTFT / KV bytes and
+            structural validation of snapshot + Chrome trace; BENCH JSON
 """
 
 from __future__ import annotations
@@ -32,6 +36,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        obs_report,
         quant_matmul,
         roofline_report,
         serve_throughput,
@@ -52,6 +57,7 @@ def main() -> None:
         "serve_long": serve_throughput.run_longprompt,
         "tp": tp_matmul.run,
         "quant": quant_matmul.run,
+        "obs": obs_report.run,
     }
     want = sys.argv[1:] or list(tables)
     for name in want:

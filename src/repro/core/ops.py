@@ -18,10 +18,13 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs import attribution as _obs
 
 _BACKEND = contextvars.ContextVar("repro_matmul_backend", default="xla")
 
@@ -92,6 +95,13 @@ def matmul(
         raise ValueError(f"matmul shape mismatch: {x.shape} @ {w.shape}")
 
     if backend == "xla":
+        _obs.record_gemm(
+            math.prod(lead) if lead else 1,
+            w.shape[1],
+            k,
+            dtype=x.dtype,
+            backend="xla",
+        )
         # `bf16-reduce` (§Perf): emit the dot output in bf16 so GSPMD's
         # row-parallel partial-sum all-reduces move half the bytes.  The
         # MXU accumulates fp32 internally either way; only the cross-shard
@@ -128,7 +138,10 @@ def matmul(
         from repro.core.systolic import blocked_matmul
 
         m, n = x2.shape[0], w.shape[1]
-        bm, bn, bk = _reference_blocks(m, n, k, x2.dtype)
+        (bm, bn, bk), plan_source = _reference_blocks(m, n, k, x2.dtype)
+        _obs.record_gemm(
+            m, n, k, dtype=x2.dtype, backend="reference", plan_source=plan_source
+        )
         plan = BlockPlan(m, n, k, bm, bn, bk, in_dtype=str(x2.dtype))
         y2 = blocked_matmul(x2, w, plan).astype(out_dtype)
     else:  # pragma: no cover
@@ -173,6 +186,10 @@ def _quant_matmul(x: jax.Array, w, *, out_dtype, qprec: str | None) -> jax.Array
 
         y2 = systolic_ops.quant_matmul(xq, wq, out_dtype=out_dtype)
     else:
+        # Equivalence path: quantized numerics through a dequantized dot.
+        _obs.record_gemm(
+            x2.shape[0], w.shape[1], k, dtype=act_qd, backend=_BACKEND.get()
+        )
         y2 = jnp.dot(
             xq.dequantize(jnp.float32),
             wq.dequantize(jnp.float32),
@@ -181,8 +198,10 @@ def _quant_matmul(x: jax.Array, w, *, out_dtype, qprec: str | None) -> jax.Array
     return y2.reshape(*lead, w.shape[1])
 
 
-def _reference_blocks(m: int, n: int, k: int, dtype) -> tuple[int, int, int]:
-    """(bm, bn, bk) for the Definition-4 reference path.
+def _reference_blocks(
+    m: int, n: int, k: int, dtype
+) -> tuple[tuple[int, int, int], str]:
+    """((bm, bn, bk), plan_source) for the Definition-4 reference path.
 
     Prefers a ``repro.tune`` cache entry for this problem when its geometry
     divides the (unpadded) shapes -- the reference implementation cannot pad
@@ -198,12 +217,12 @@ def _reference_blocks(m: int, n: int, k: int, dtype) -> tuple[int, int, int]:
     except ImportError:  # pragma: no cover
         hit = None
     if hit is not None and m % hit.bm == 0 and n % hit.bn == 0 and k % hit.bk == 0:
-        return hit.bm, hit.bn, hit.bk
+        return (hit.bm, hit.bn, hit.bk), "tuned"
     return (
         _largest_divisor_block(m, 512),
         _largest_divisor_block(n, 512),
         _largest_divisor_block(k, 512),
-    )
+    ), "heuristic"
 
 
 def _largest_divisor_block(dim: int, cap: int) -> int:
@@ -240,6 +259,10 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
             )(x)
         return grouped_ops.grouped_matmul(x, w, out_dtype=out_dtype)
     spec = "geck,ekn->gecn" if x.ndim == 4 else "eck,ekn->ecn"
+    _obs.record_gemm(
+        math.prod(x.shape[:-1]), w.shape[-1], x.shape[-1],
+        dtype=x.dtype, backend=_BACKEND.get(),
+    )
     if jax.default_backend() == "cpu" and x.dtype == jnp.bfloat16:
         # XLA:CPU's DotThunk lacks BF16xBF16=F32 for multi-batch-dim dots;
         # widen on CPU only (tests/smoke) -- TPU takes the bf16 path.

@@ -55,7 +55,44 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
+
 DIRECTIONS = ("plus", "minus")
+
+
+def _record_dispatch(
+    mode: str, tp: int, m: int, n: int, k: int, dtype, overlap: bool, hop_bytes: int
+) -> None:
+    """Telemetry for one sharded-GEMM dispatch (host side, trace time).
+
+    Counts ring traffic and publishes the modelled hop/compute overlap ratio
+    (t_hop / t_step under the chip model; < 1.0 means each hop hides under
+    its block matmul -- the mesh-level balance condition of DESIGN.md §6).
+    Per-hop "tp.ring_hop" spans are trace-time structural markers (the hops
+    themselves run on-device inside shard_map), carrying bytes + modelled
+    seconds in args.
+    """
+    if not _obs_metrics.enabled():
+        return
+    from repro.core import hw
+
+    chip = hw.get_chip(None)
+    hops = tp - 1 if overlap else 0
+    _obs_metrics.inc("collective.calls", mode=mode)
+    _obs_metrics.inc("collective.hops", hops, mode=mode)
+    _obs_metrics.inc("collective.hop_bytes", hop_bytes * hops, mode=mode)
+    t_hop = hop_bytes / chip.ici_bw_per_link
+    step_flops = 2.0 * (m // tp) * n * k / tp  # one ring step's shard GEMM
+    t_step = step_flops / chip.peak_flops(str(dtype))
+    ratio = t_hop / t_step if t_step > 0 else float("inf")
+    _obs_metrics.set_gauge("collective.overlap_ratio", ratio, mode=mode)
+    for s in range(hops):
+        with _obs_trace.span(
+            "tp.ring_hop", cat="trace",
+            mode=mode, hop=s, bytes=hop_bytes, modeled_s=t_hop,
+        ):
+            pass
 
 
 # ---------------------------------------------------------------------------
@@ -209,6 +246,11 @@ def all_gather_matmul(
     _check_divisible("M", m, tp)
     _check_divisible("N", n, tp)
     out_dtype = jnp.dtype(out_dtype or a.dtype)
+    # Each hop moves one (M/tp, K) chunk of A at the input dtype.
+    _record_dispatch(
+        "allgather", tp, m, n, k, a.dtype, overlap,
+        (m // tp) * k * a.dtype.itemsize,
+    )
     if block is None:
         block = _tp_tuned_block(m, n, k, a.dtype, tp, (m // tp, n // tp, k))
     fn = functools.partial(
@@ -294,6 +336,10 @@ def reduce_scatter_matmul(
     _check_divisible("K", k, tp)
     _check_divisible("M", m, tp)
     out_dtype = jnp.dtype(out_dtype or a.dtype)
+    # Each hop moves one (M/tp, N) fp32 partial-sum carry.
+    _record_dispatch(
+        "reducescatter", tp, m, n, k, a.dtype, overlap, (m // tp) * n * 4
+    )
     if block is None:
         block = _tp_tuned_block(m, n, k, a.dtype, tp, (m // tp, n, k // tp))
     fn = functools.partial(

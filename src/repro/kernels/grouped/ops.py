@@ -11,6 +11,7 @@ from repro.core import hw
 from repro.core.blocking import round_up as _round_up
 from repro.kernels._compat import auto_interpret as _auto_interpret
 from repro.kernels.grouped import kernel as _kernel
+from repro.obs import attribution as _obs
 
 
 def _tuned_block(c: int, n: int, k: int, dtype, chip) -> tuple[int, int, int] | None:
@@ -65,10 +66,16 @@ def grouped_matmul(
     e, c, k = x.shape
     n = w.shape[2]
     out_dtype = jnp.dtype(out_dtype or x.dtype)
+    plan_source = "explicit"
     if not (bc and bn and bk):  # fully explicit blocks skip the cache lookup
         tuned = _tuned_block(c, n, k, x.dtype, chip)
+        plan_source = "tuned" if tuned is not None else "heuristic"
         if tuned is not None:
             bc, bn, bk = bc or tuned[0], bn or tuned[1], bk or tuned[2]
+    # m = E*C: the grouped problem's FLOP count is 2*(E*C)*N*K.
+    _obs.record_gemm(
+        e * c, n, k, dtype=x.dtype, backend="pallas-grouped", plan_source=plan_source
+    )
     bc = bc or min(512, _round_up(c, chip.sublane_dim))
     bn = bn or min(512, _round_up(n, chip.lane_dim))
     bk = bk or min(1024, _round_up(k, chip.lane_dim))

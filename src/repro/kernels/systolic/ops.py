@@ -19,6 +19,7 @@ from repro.core.blocking import BlockPlan, derive_block_plan
 from repro.core.blocking import round_up as _round_up
 from repro.kernels._compat import auto_interpret as _auto_interpret
 from repro.kernels.systolic import kernel as _kernel
+from repro.obs import attribution as _obs
 from repro.quant.qarray import DEFAULT_BLOCK_K, QArray, quantize_act, quantize_weight
 
 
@@ -125,6 +126,16 @@ def matmul(
         blocks
         if blocks is not None
         else _clamp_plan(m, n, k, plan, chip, in_dtype=str(a.dtype))
+    )
+    _obs.record_gemm(
+        m,
+        n,
+        k,
+        dtype=a.dtype,
+        backend="pallas-systolic",
+        plan_source="explicit"
+        if plan is not None
+        else ("tuned" if blocks is not None else "heuristic"),
     )
     return _matmul_jit(
         a,
@@ -267,6 +278,16 @@ def quant_matmul(
         bm, bn, bk = blocks
     else:
         bm, bn, bk = _clamp_plan(m, n, k, plan, chip, in_dtype=dtype_name)
+    _obs.record_gemm(
+        m,
+        n,
+        k,
+        dtype=dtype_name,
+        backend="pallas-systolic",
+        plan_source="explicit"
+        if plan is not None
+        else ("tuned" if blocks is not None else "heuristic"),
+    )
     a_s, qk_a = _row_scales(a, m, k)
     b_s, qk_b = _col_scales(b, k, n)
     # One k-step must sit inside one scale block on both operands.

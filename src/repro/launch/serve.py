@@ -45,6 +45,8 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import json
+import os
 import time
 
 import jax
@@ -58,6 +60,30 @@ from repro.serving import (
     ServeEngine,
     requests_from_trace,
 )
+
+
+def _dump_metrics(metrics_dir: str, extra_registry=None, extra: dict | None = None):
+    """Write the merged metrics snapshot to ``metrics_dir/snapshot.json``
+    (process-wide dispatch registry + the scheduler's private registry)."""
+    from repro import obs
+
+    regs = [obs.get_registry()]
+    if extra_registry is not None:
+        regs.append(extra_registry)
+    doc = obs.snapshot_doc(*regs, extra=extra)
+    os.makedirs(metrics_dir, exist_ok=True)
+    path = os.path.join(metrics_dir, "snapshot.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+def _dump_trace(metrics_dir: str) -> str:
+    from repro import obs
+
+    path = os.path.join(metrics_dir, "trace.json")
+    obs.get_tracer().export_chrome(path)
+    return path
 
 
 def _build_engine(model, params, args, max_len: int, batch: int) -> ServeEngine:
@@ -121,6 +147,9 @@ def run_synchronized(model, params, args) -> None:
     print(engine.decode_plan_report())
     sample = jax.numpy.concatenate(pieces, axis=1)
     print("sample tokens:", sample[0, :16].tolist())
+    if args.metrics_dir:
+        print("metrics snapshot:", _dump_metrics(args.metrics_dir))
+        print("chrome trace:", _dump_trace(args.metrics_dir))
 
 
 def run_continuous(model, params, args) -> None:
@@ -149,7 +178,17 @@ def run_continuous(model, params, args) -> None:
         chunk_budget=args.chunk_budget,
         quantize_kv=args.quantize == "kv8",
     )
-    results = sched.run(requests_from_trace(trace))
+    on_tick = None
+    if args.metrics_dir:
+        interval = max(1, args.metrics_interval)
+
+        def on_tick(s) -> None:
+            if s.tick % interval == 0:
+                _dump_metrics(
+                    args.metrics_dir, s.stats.registry, extra=s.stats.summary()
+                )
+
+    results = sched.run(requests_from_trace(trace), on_tick=on_tick)
 
     s = sched.stats.summary()
     mode = f"{args.policy}+chunked" if args.chunked_prefill else args.policy
@@ -165,6 +204,14 @@ def run_continuous(model, params, args) -> None:
     print(engine.decode_plan_report())
     rid0 = min(results)
     print(f"sample tokens (request {rid0}):", results[rid0][:16].tolist())
+    if args.metrics_dir:
+        # Final snapshot carries the run summary (MFU, TTFT/ITL, KV bytes)
+        # in "extra" alongside the raw registry series.
+        print(
+            "metrics snapshot:",
+            _dump_metrics(args.metrics_dir, sched.stats.registry, extra=s),
+        )
+        print("chrome trace:", _dump_trace(args.metrics_dir))
 
 
 def main() -> None:
@@ -230,6 +277,21 @@ def main() -> None:
         "per-token int8 activations through the quantized systolic kernel, "
         "kv8 = int8 KV-cache pool with per-head-per-slot scales "
         "(continuous mode only)",
+    )
+    ap.add_argument(
+        "--metrics-dir",
+        default=None,
+        help="dump obs telemetry here (DESIGN.md §11): snapshot.json "
+        "(metrics registry, periodically overwritten in continuous mode) "
+        "and trace.json (Chrome trace_event timeline, final); validate with "
+        "python -m repro.obs <files>",
+    )
+    ap.add_argument(
+        "--metrics-interval",
+        type=int,
+        default=50,
+        metavar="TICKS",
+        help="ticks between periodic snapshot.json rewrites (continuous mode)",
     )
     args = ap.parse_args()
 

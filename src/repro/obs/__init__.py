@@ -1,0 +1,80 @@
+"""repro.obs: utilization-accounting telemetry (DESIGN.md §11).
+
+The cross-cutting layer every other subsystem reports through:
+
+  * ``metrics``      -- counters/gauges/histograms with labels, thread-safe,
+                        zero-dep; snapshot -> dict / Prometheus text / JSON;
+  * ``trace``        -- span tracer (``with span(...)``, ``@instrument``)
+                        into a ring buffer, exported as Chrome
+                        ``trace_event`` JSON (Perfetto-loadable);
+  * ``attribution``  -- per-dispatch GEMM accounting: MFU vs the dtype-aware
+                        chip peak, and measured-vs-roofline model residual
+                        (the paper's achieved-vs-f_max gap, live).
+
+Recording is process-wide switchable: ``REPRO_OBS=0`` (env) or
+``obs.disabled()`` (scope) turns every record call into one boolean check --
+``benchmarks/obs_report.py`` asserts the *enabled* overhead on the serving
+hot path stays under 3%.
+"""
+
+from repro.obs.attribution import (  # noqa: F401
+    GemmTotals,
+    collecting,
+    mfu,
+    plan_hit_rate,
+    record_gemm,
+    roofline_seconds,
+)
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    disabled,
+    enable,
+    enabled,
+    get_registry,
+    inc,
+    observe,
+    reset,
+    set_gauge,
+    snapshot_doc,
+    validate_snapshot,
+)
+from repro.obs.trace import (  # noqa: F401
+    Tracer,
+    get_tracer,
+    instant,
+    instrument,
+    span,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "GemmTotals",
+    "Histogram",
+    "Registry",
+    "Tracer",
+    "collecting",
+    "disabled",
+    "enable",
+    "enabled",
+    "get_registry",
+    "get_tracer",
+    "inc",
+    "instant",
+    "instrument",
+    "mfu",
+    "observe",
+    "plan_hit_rate",
+    "record_gemm",
+    "reset",
+    "roofline_seconds",
+    "set_gauge",
+    "snapshot_doc",
+    "span",
+    "validate_chrome_trace",
+    "validate_snapshot",
+]

@@ -1,0 +1,48 @@
+"""Validate obs artefacts from the command line (CI's schema gate).
+
+    PYTHONPATH=src python -m repro.obs snapshot.json trace.json ...
+
+Files named ``trace*.json`` (or containing a ``traceEvents`` key) validate
+against the Chrome ``trace_event`` structure; everything else against the
+metrics snapshot schema.  Exit code 0 = all valid; problems are printed one
+per line and exit code is 1.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.obs.metrics import validate_snapshot
+from repro.obs.trace import validate_chrome_trace
+
+
+def validate_file(path: str) -> list[str]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"unreadable JSON: {e}"]
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        return validate_chrome_trace(doc)
+    return validate_snapshot(doc)
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    failed = False
+    for path in argv:
+        errs = validate_file(path)
+        if errs:
+            failed = True
+            for e in errs:
+                print(f"{path}: {e}")
+        else:
+            print(f"{path}: OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,160 @@
+"""Utilization accounting: MFU and roofline-model attribution for GEMMs.
+
+The paper's Table I closes the loop between a *model* (the analytical f_max /
+utilisation predictions) and a *measurement* (Quartus reports, wall clocks).
+This module is that loop for the serving hot path:
+
+  * every ``core.ops.matmul`` dispatch records what ran (shape, dtype,
+    backend, whether the block plan came from the tune cache), and
+  * timed execution windows (decode ticks, prefill chunks) divide measured
+    wall time into the recorded FLOPs to report
+
+      MFU            = achieved FLOP/s / ``Chip.peak_flops(dtype)``
+      model residual = measured seconds / roofline-predicted seconds
+
+    -- the serving analogue of the paper's achieved-vs-f_max gap: residual
+    ~1.0 means the BlockPlan model explains the measurement; >>1 means the
+    model is missing a cost (the thing worth investigating).
+
+Dispatch happens at **jax trace time**: a jitted step records its GEMMs once,
+when first compiled, not once per execution.  That is exactly what the MFU
+computation needs -- a per-compiled-step FLOP total, reused for every timed
+execution of that step.  ``GemmTotals`` is the accumulator: a component that
+owns a jitted function wraps its invocations in ``collecting(totals)``; the
+first (tracing) call populates the totals, later calls add nothing, and the
+component divides its measured step time into ``totals.flops``.
+
+Counters recorded on the default registry per dispatch:
+
+  gemm.calls{backend,dtype}    dispatches (per trace, not per execution)
+  gemm.flops{backend}          2*M*N*K summed over dispatches
+  tune.plan.hit/miss{backend}  whether the tune cache supplied the blocks
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import functools
+
+from repro.core import hw
+from repro.obs import metrics
+
+# Plan provenance values record_gemm accepts (None = backend has no plan
+# concept, e.g. the XLA dot path).
+PLAN_SOURCES = ("tuned", "heuristic", "explicit")
+
+_COLLECT = contextvars.ContextVar("repro_obs_gemm_collect", default=None)
+
+
+@dataclasses.dataclass
+class GemmTotals:
+    """Accumulated GEMM work of one traced step (see module docstring)."""
+
+    flops: float = 0.0
+    predicted_s: float = 0.0  # roofline lower bound, summed over GEMMs
+    calls: int = 0
+    plan_hits: int = 0
+    plan_misses: int = 0
+
+    def add(self, flops: float, predicted_s: float, plan_source: str | None) -> None:
+        self.flops += flops
+        self.predicted_s += predicted_s
+        self.calls += 1
+        if plan_source == "tuned":
+            self.plan_hits += 1
+        elif plan_source == "heuristic":
+            self.plan_misses += 1
+
+
+@contextlib.contextmanager
+def collecting(totals: GemmTotals):
+    """Route ``record_gemm`` calls inside the scope into ``totals`` (in
+    addition to the default registry)."""
+    token = _COLLECT.set(totals)
+    try:
+        yield
+    finally:
+        _COLLECT.reset(token)
+
+
+@functools.lru_cache(maxsize=4096)
+def roofline_seconds(m: int, n: int, k: int, dtype: str, chip_name: str) -> float:
+    """Roofline-predicted seconds for an (M, N, K) GEMM at ``dtype``.
+
+    Uses the BlockPlan the analytical heuristic would pick (so the predicted
+    HBM traffic reflects real block re-streaming, not the ideal single-pass
+    bound); shapes the heuristic cannot block fall back to the ideal-traffic
+    roofline.  Cached: dispatch calls this on the trace path.
+    """
+    from repro.core.blocking import derive_block_plan
+
+    chip = hw.get_chip(chip_name)
+    try:
+        plan = derive_block_plan(m, n, k, in_dtype=dtype, chip=chip)
+        return max(plan.compute_seconds(chip), plan.memory_seconds(chip))
+    except (ValueError, ZeroDivisionError):
+        flops = 2.0 * m * n * k
+        bytes_ = (m * k + k * n) * hw.dtype_bytes(dtype) + m * n * hw.dtype_bytes(
+            dtype
+        )
+        return max(flops / chip.peak_flops(dtype), bytes_ / chip.hbm_bw)
+
+
+def mfu(flops: float, seconds: float, dtype=None, chip=None) -> float:
+    """Achieved fraction of the dtype-aware peak (the paper's utilisation
+    column, measured instead of counted)."""
+    if seconds <= 0:
+        return 0.0
+    chip = hw.get_chip(chip)
+    return (flops / seconds) / chip.peak_flops(str(dtype) if dtype else None)
+
+
+def record_gemm(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    dtype,
+    backend: str,
+    plan_source: str | None = None,
+) -> None:
+    """One GEMM dispatch (called from the kernel wrappers at trace time)."""
+    if not metrics.enabled():
+        return
+    if plan_source is not None and plan_source not in PLAN_SOURCES:
+        raise ValueError(
+            f"plan_source must be one of {PLAN_SOURCES} or None, got {plan_source!r}"
+        )
+    dtype = str(dtype)
+    flops = 2.0 * m * n * k
+    metrics.inc("gemm.calls", backend=backend, dtype=dtype)
+    metrics.inc("gemm.flops", flops, backend=backend)
+    if plan_source == "tuned":
+        metrics.inc("tune.plan.hit", backend=backend)
+    elif plan_source == "heuristic":
+        metrics.inc("tune.plan.miss", backend=backend)
+    totals = _COLLECT.get()
+    if totals is not None:
+        chip = hw.get_chip(None)
+        totals.add(
+            flops,
+            roofline_seconds(int(m), int(n), int(k), dtype, chip.name),
+            plan_source,
+        )
+
+
+def plan_hit_rate(backend: str | None = None) -> float:
+    """Fraction of plan-consulting dispatches served from the tune cache
+    (over the default registry; 0.0 before any dispatch)."""
+    reg = metrics.get_registry()
+    snap = reg.snapshot()["counters"]
+
+    def total(name: str) -> float:
+        if backend is not None:
+            return snap.get(f'{name}{{backend="{backend}"}}', 0.0)
+        return sum(v for s, v in snap.items() if s.split("{")[0] == name)
+
+    hits, misses = total("tune.plan.hit"), total("tune.plan.miss")
+    return hits / (hits + misses) if hits + misses else 0.0

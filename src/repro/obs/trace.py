@@ -1,0 +1,209 @@
+"""Span tracer: wall-time events in a ring buffer, exported as Chrome
+``trace_event`` JSON (loadable in Perfetto / chrome://tracing).
+
+The paper reasons about utilisation with pipeline timelines (Section V's
+overlapped Read/Compute/Write phases); this is the host-side equivalent for
+the serving stack: every scheduler tick, prefill chunk, decode step, autotune
+measurement, and collective dispatch opens a span, and the exported timeline
+shows where wall time actually went -- the overlap (or bubble) is visible
+instead of inferred.
+
+Scope of honesty: spans time **host-side dispatch**, not device execution.
+A span around a jitted call covers trace+compile on its first invocation and
+the blocking wait on subsequent ones (serving code calls
+``block_until_ready`` inside its spans, so steady-state spans do bound the
+device step).  Events recorded while a jax trace is being staged (e.g. the
+per-hop spans of the collective matmul) are *trace-time* events: near-zero
+duration, tagged ``cat="trace"``, carrying their payload (bytes, shapes) in
+``args`` -- structural markers, not timings.
+
+The buffer is a bounded deque: a long-running server keeps the most recent
+``capacity`` events and drops the oldest -- export never grows without
+bound, matching the metrics registry's sliding-window histograms.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import json
+import os
+import threading
+import time
+from collections import deque
+from typing import Any
+
+from repro.obs import metrics as _metrics
+
+
+class Tracer:
+    """Ring buffer of completed spans + instants."""
+
+    def __init__(self, capacity: int = 65536):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._events: deque[dict] = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+        self._dropped = 0
+
+    # -- recording -----------------------------------------------------------
+
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def _push(self, ev: dict) -> None:
+        with self._lock:
+            if len(self._events) == self.capacity:
+                self._dropped += 1
+            self._events.append(ev)
+
+    @contextlib.contextmanager
+    def span(self, name: str, cat: str = "", **args):
+        """Record a complete ("ph": "X") event around the enclosed block.
+
+        The span is recorded even if the block raises (with an ``error``
+        arg), so a crashed tick still shows up in the timeline.
+        """
+        if not _metrics.enabled():
+            yield
+            return
+        start = self._now_us()
+        err = None
+        try:
+            yield
+        except BaseException as e:
+            err = type(e).__name__
+            raise
+        finally:
+            ev = {
+                "name": name,
+                "cat": cat or "span",
+                "ph": "X",
+                "ts": start,
+                "dur": self._now_us() - start,
+                "pid": os.getpid(),
+                "tid": threading.get_ident() & 0xFFFF,
+            }
+            payload = {k: v for k, v in args.items() if v is not None}
+            if err is not None:
+                payload["error"] = err
+            if payload:
+                ev["args"] = payload
+            self._push(ev)
+
+    def instant(self, name: str, cat: str = "", **args) -> None:
+        """Record a zero-duration ("ph": "i") marker."""
+        if not _metrics.enabled():
+            return
+        ev = {
+            "name": name,
+            "cat": cat or "instant",
+            "ph": "i",
+            "s": "t",  # thread-scoped instant
+            "ts": self._now_us(),
+            "pid": os.getpid(),
+            "tid": threading.get_ident() & 0xFFFF,
+        }
+        if args:
+            ev["args"] = dict(args)
+        self._push(ev)
+
+    def instrument(self, name: str | None = None, cat: str = ""):
+        """Decorator form of ``span`` (span name defaults to the function's
+        qualified name)."""
+
+        def deco(fn):
+            span_name = name or fn.__qualname__
+
+            @functools.wraps(fn)
+            def wrapper(*a, **kw):
+                with self.span(span_name, cat=cat):
+                    return fn(*a, **kw)
+
+            return wrapper
+
+        return deco
+
+    # -- export --------------------------------------------------------------
+
+    def events(self) -> list[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self._dropped = 0
+            self._t0 = time.perf_counter()
+
+    def export_chrome(self, path=None) -> dict:
+        """The Chrome ``trace_event`` document ({"traceEvents": [...]}).
+
+        ``path`` set writes it as JSON (atomic enough for our use: written
+        once at the end of a run).  Spans dropped by the ring buffer are
+        reported in ``otherData`` so a truncated timeline is labelled as
+        such instead of silently looking complete.
+        """
+        with self._lock:
+            events = list(self._events)
+            dropped = self._dropped
+        doc = {
+            "traceEvents": events,
+            "displayTimeUnit": "ms",
+            "otherData": {"dropped_events": dropped, "capacity": self.capacity},
+        }
+        if path is not None:
+            path = os.fspath(path)
+            parent = os.path.dirname(path) or "."
+            os.makedirs(parent, exist_ok=True)
+            with open(path, "w") as f:
+                json.dump(doc, f)
+        return doc
+
+
+def validate_chrome_trace(doc: Any) -> list[str]:
+    """Structural check of a trace document; returns problems ([] = ok)."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return [f"trace must be an object, got {type(doc).__name__}"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents must be a list"]
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errs.append(f"traceEvents[{i}] must be an object")
+            continue
+        for field, types in (
+            ("name", str), ("ph", str), ("ts", (int, float)),
+            ("pid", int), ("tid", int),
+        ):
+            if not isinstance(ev.get(field), types):
+                errs.append(f"traceEvents[{i}].{field} missing or mistyped")
+        if ev.get("ph") == "X" and not isinstance(ev.get("dur"), (int, float)):
+            errs.append(f"traceEvents[{i}]: complete event without dur")
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default tracer.
+# ---------------------------------------------------------------------------
+
+_TRACER = Tracer()
+
+
+def get_tracer() -> Tracer:
+    return _TRACER
+
+
+def span(name: str, cat: str = "", **args):
+    return _TRACER.span(name, cat=cat, **args)
+
+
+def instant(name: str, cat: str = "", **args) -> None:
+    _TRACER.instant(name, cat=cat, **args)
+
+
+def instrument(name: str | None = None, cat: str = ""):
+    return _TRACER.instrument(name, cat=cat)

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.registry import Model
+from repro.obs import attribution as _obs
 from repro.serving.kvpool import clear_slots
 
 
@@ -196,6 +197,19 @@ class ServeEngine:
         self.cache = None
         self.pos = 0
         self._decode_plans: dict | None = None
+        # GEMM-work accounting (DESIGN.md §11).  core.ops.matmul records at
+        # *trace* time, so each totals object accumulates exactly one traced
+        # step's FLOPs + roofline prediction: the first call through a jitted
+        # function populates it, cached executions add nothing.  Separate
+        # objects per call path because each path is its own compile:
+        #   decode_totals    vector-pos decode_slots (one continuous tick)
+        #   generate_totals  synchronized scalar-pos decode step
+        #   prefill_totals   monolithic prefills (aggregate across shapes)
+        #   chunk totals     per (bucketed length, wrapped) prefill chunk
+        self.decode_totals = _obs.GemmTotals()
+        self.generate_totals = _obs.GemmTotals()
+        self.prefill_totals = _obs.GemmTotals()
+        self._chunk_totals: dict[tuple[int, bool], _obs.GemmTotals] = {}
 
     @contextlib.contextmanager
     def _mesh_scope(self):
@@ -242,7 +256,7 @@ class ServeEngine:
         """Prime the resident cache from a synchronized prompt batch; returns
         the first sampled continuation token (prefill emits last-position
         logits)."""
-        with self._mesh_scope():
+        with self._mesh_scope(), _obs.collecting(self.prefill_totals):
             logits, self.cache = self._prefill(self.params, batch)
         self.pos = self.prompt_positions(batch)
         return self._sample(logits)
@@ -254,7 +268,7 @@ class ServeEngine:
             raise RuntimeError("prefill() first")
         outs = []
         tok = tokens
-        with self._mesh_scope():
+        with self._mesh_scope(), _obs.collecting(self.generate_totals):
             for _ in range(n_steps):
                 logits, self.cache = self._decode(
                     self.params, tok, self.cache, jnp.int32(self.pos)
@@ -296,7 +310,7 @@ class ServeEngine:
         (1, 1[, ncb]), primed batch-1 cache at this engine's max_len) for the
         KV pool to scatter into the assigned slot.
         """
-        with self._mesh_scope():
+        with self._mesh_scope(), _obs.collecting(self.prefill_totals):
             logits, cache = self._prefill(self.params, batch)
         return self._sample(logits), cache
 
@@ -340,7 +354,10 @@ class ServeEngine:
         """
         length = tokens.shape[1]
         wrapped = offset + length > self.attn_cache_len()
-        with self._mesh_scope():
+        totals = self._chunk_totals.setdefault(
+            (length, wrapped), _obs.GemmTotals()
+        )
+        with self._mesh_scope(), _obs.collecting(totals):
             logits, cache_one = self._chunk(
                 self.params,
                 jnp.asarray(tokens),
@@ -358,6 +375,6 @@ class ServeEngine:
         Returns (sampled tokens (B, 1[, ncb]), new cache).  The cache is
         donated, matching the synchronized path's allocation-free decode.
         """
-        with self._mesh_scope():
+        with self._mesh_scope(), _obs.collecting(self.decode_totals):
             logits, cache = self._decode(self.params, tokens, cache, pos)
         return self._sample(logits), cache

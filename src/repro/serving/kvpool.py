@@ -202,6 +202,20 @@ class KVPool:
     def occupancy(self) -> float:
         return self.n_active / self.n_slots
 
+    def bytes_resident(self) -> int:
+        """Device bytes held by the pool's *resident* cache form.
+
+        Under kv8 that is the int8 value arrays plus their fp32 scale
+        sidecars (the honest footprint of the quantized pool -- scales are
+        real bytes); otherwise the fp pytree.  The pool is preallocated, so
+        this is constant for the life of the pool: n_slots * max_len worth
+        of state regardless of how many slots are live.
+        """
+        resident = self._qcache if self.quantize_kv else self._cache
+        return sum(
+            leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(resident)
+        )
+
     def active_slots(self) -> list[int]:
         free = set(self._free)
         return [s for s in range(self.n_slots) if s not in free]

@@ -51,6 +51,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import attribution as _obs_attr
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.serving.engine import ServeEngine, chunk_schedule
 from repro.serving.kvpool import KVPool
 
@@ -77,6 +80,8 @@ class Request:
     admitted_tick: int = -1
     finished_tick: int = -1
     first_token_s: float = -1.0  # wall seconds from run start to first token
+    admitted_s: float = -1.0  # wall seconds from run start to admission
+    last_token_s: float = -1.0  # wall time of the latest token (ITL basis)
     # chunked prefill progress: the (offset, length) schedule and how many
     # chunks have landed in the KV slot so far (PREFILLING-with-progress)
     chunks: list = dataclasses.field(default_factory=list)
@@ -106,51 +111,158 @@ def requests_from_trace(trace: list[dict]) -> list[Request]:
     ]
 
 
-@dataclasses.dataclass
 class SchedulerStats:
-    """Aggregates the serving analogue of the paper's utilisation column."""
+    """Aggregates the serving analogue of the paper's utilisation column.
 
-    ticks: int = 0
-    decode_steps: int = 0
-    idle_ticks: int = 0
-    tokens_out: int = 0
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    prefill_chunks: int = 0
-    occupancy_sum: float = 0.0  # fraction of slots active, summed over decode steps
-    step_latency_s: list = dataclasses.field(default_factory=list)
-    # Wall time of whole ticks in which >= 1 slot decoded: what a decoding
-    # request actually waits between its tokens, *including* any prefill
-    # work co-scheduled (chunked) or serialized (monolithic) into the tick.
-    # This is the metric the chunked-prefill tentpole improves: a monolithic
-    # long-prompt admission lands its entire prompt forward inside one such
-    # tick, a chunked one at most chunk_budget bounded chunks.
-    tick_latency_s: list = dataclasses.field(default_factory=list)
+    Backed by a **private** ``repro.obs`` metrics Registry (DESIGN.md §11):
+    every number here is a counter/gauge/histogram series, so two schedulers
+    in one process (gang-vs-continuous comparisons, enabled-vs-disabled
+    benchmark arms) never mix samples, ``summary()`` is a read of the
+    registry rather than parallel dict bookkeeping, and ``--metrics-dir``
+    snapshots merge ``stats.registry`` with the process-wide dispatch
+    registry via ``obs.snapshot_doc``.
+
+    The raw instruments are used directly (not the registry's gated
+    convenience wrappers): scheduling correctness bookkeeping -- token
+    counts, occupancy, latencies -- must not vanish under ``REPRO_OBS=0``;
+    only the derived-telemetry extras (MFU, residual, spans) are gated.
+
+    Percentiles come from ``obs.metrics.Histogram.quantile`` -- nearest-rank,
+    clamped, so p99 over fewer than 100 samples reports the max instead of
+    an interior (or out-of-range) element.
+    """
+
+    def __init__(self, registry=None):
+        from repro.obs import metrics as _m
+
+        self.registry = registry if registry is not None else _m.Registry()
+        r = self.registry
+        self._ticks = r.counter("sched.ticks")
+        self._decode_steps = r.counter("sched.decode_steps")
+        self._idle_ticks = r.counter("sched.idle_ticks")
+        self._tokens_out = r.counter("sched.tokens_out")
+        self._prefill_s = r.counter("sched.prefill_s")
+        self._decode_s = r.counter("sched.decode_s")
+        self._tick_s = r.counter("sched.tick_s")
+        self._prefill_chunks = r.counter("sched.prefill_chunks")
+        self._admitted = r.counter("sched.admitted")
+        self._evicted = r.counter("sched.evicted")
+        self._occupancy_sum = r.counter("sched.occupancy_sum")
+        self._step_lat = r.histogram("sched.step_latency_s")
+        self._tick_lat = r.histogram("sched.tick_latency_s")
+        self._ttft = r.histogram("serve.ttft_s")
+        self._itl = r.histogram("serve.itl_s")
+        self._mfu = r.histogram("serve.decode_mfu")
+        self._residual = r.histogram("serve.model_residual")
+        self._queue_depth = r.gauge("sched.queue_depth")
+        self._slot_occupancy = r.gauge("sched.slot_occupancy")
+        self._kv_bytes = r.gauge("serve.kv_bytes_resident")
+
+    # -- recording (called by the scheduler) ---------------------------------
+
+    def count_tick(self, wall_s: float) -> None:
+        self._ticks.inc()
+        self._tick_s.inc(wall_s)
+
+    def count_idle_tick(self) -> None:
+        self._idle_ticks.inc()
+
+    def count_admitted(self) -> None:
+        self._admitted.inc()
+
+    def count_evicted(self) -> None:
+        self._evicted.inc()
+
+    def count_token(self, ttft_s: float | None, itl_s: float | None) -> None:
+        self._tokens_out.inc()
+        if ttft_s is not None:
+            self._ttft.observe(ttft_s)
+        if itl_s is not None:
+            self._itl.observe(itl_s)
+
+    def add_prefill(self, wall_s: float, *, chunk: bool = False) -> None:
+        self._prefill_s.inc(wall_s)
+        if chunk:
+            self._prefill_chunks.inc()
+
+    def record_decode_step(self, wall_s: float, occupancy: float) -> None:
+        self._decode_s.inc(wall_s)
+        self._decode_steps.inc()
+        self._step_lat.observe(wall_s)
+        self._occupancy_sum.inc(occupancy)
+
+    def record_tick_latency(self, wall_s: float) -> None:
+        self._tick_lat.observe(wall_s)
+
+    def record_utilization(self, mfu: float, residual: float) -> None:
+        self._mfu.observe(mfu)
+        self._residual.observe(residual)
+
+    def set_gauges(
+        self, queue_depth: int, occupancy: float, kv_bytes: int | None = None
+    ) -> None:
+        self._queue_depth.set(queue_depth)
+        self._slot_occupancy.set(occupancy)
+        if kv_bytes is not None:
+            self._kv_bytes.set(kv_bytes)
+
+    # -- reads (the pre-registry API, preserved) -----------------------------
+
+    @property
+    def ticks(self) -> int:
+        return int(self._ticks.value)
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self._decode_steps.value)
+
+    @property
+    def idle_ticks(self) -> int:
+        return int(self._idle_ticks.value)
+
+    @property
+    def tokens_out(self) -> int:
+        return int(self._tokens_out.value)
+
+    @property
+    def prefill_s(self) -> float:
+        return self._prefill_s.value
+
+    @property
+    def decode_s(self) -> float:
+        return self._decode_s.value
+
+    @property
+    def prefill_chunks(self) -> int:
+        return int(self._prefill_chunks.value)
+
+    @property
+    def step_latency_s(self) -> list:
+        return self._step_lat.values()
+
+    @property
+    def tick_latency_s(self) -> list:
+        return self._tick_lat.values()
 
     def mean_occupancy(self) -> float:
-        return self.occupancy_sum / self.decode_steps if self.decode_steps else 0.0
-
-    @staticmethod
-    def _percentiles(lat: list) -> tuple[float, float]:
-        if not lat:
-            return 0.0, 0.0
-        arr = np.asarray(lat)
-        return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+        steps = self.decode_steps
+        return self._occupancy_sum.value / steps if steps else 0.0
 
     def latency_percentiles(self) -> tuple[float, float]:
         """(p50, p99) bare decode-step latency in seconds (the jitted step
         only; see ``tick_latency_s`` for what requests experience)."""
-        return self._percentiles(self.step_latency_s)
+        return self._step_lat.quantile(0.5), self._step_lat.quantile(0.99)
 
     def tick_percentiles(self) -> tuple[float, float]:
         """(p50, p99) decode-tick latency in seconds (decode step + any
         prefill work sharing the tick)."""
-        return self._percentiles(self.tick_latency_s)
+        return self._tick_lat.quantile(0.5), self._tick_lat.quantile(0.99)
 
     def summary(self) -> dict:
         p50, p99 = self.latency_percentiles()
         tp50, tp99 = self.tick_percentiles()
         wall = self.prefill_s + self.decode_s
+        overhead = max(0.0, self._tick_s.value - wall)
         return {
             "ticks": self.ticks,
             "decode_steps": self.decode_steps,
@@ -158,6 +270,7 @@ class SchedulerStats:
             "tokens_out": self.tokens_out,
             "prefill_s": round(self.prefill_s, 4),
             "decode_s": round(self.decode_s, 4),
+            "sched_overhead_s": round(overhead, 4),
             "prefill_chunks": self.prefill_chunks,
             "tok_per_s": round(self.tokens_out / wall, 2) if wall > 0 else 0.0,
             "p50_step_ms": round(p50 * 1e3, 3),
@@ -165,6 +278,13 @@ class SchedulerStats:
             "p50_tick_ms": round(tp50 * 1e3, 3),
             "p99_tick_ms": round(tp99 * 1e3, 3),
             "mean_occupancy": round(self.mean_occupancy(), 4),
+            "ttft_p50_ms": round(self._ttft.quantile(0.5) * 1e3, 3),
+            "ttft_p99_ms": round(self._ttft.quantile(0.99) * 1e3, 3),
+            "itl_p50_ms": round(self._itl.quantile(0.5) * 1e3, 3),
+            "itl_p99_ms": round(self._itl.quantile(0.99) * 1e3, 3),
+            "decode_mfu": round(self._mfu.mean(), 6),
+            "model_residual": round(self._residual.mean(), 4),
+            "kv_bytes_resident": int(self._kv_bytes.value),
         }
 
 
@@ -237,6 +357,7 @@ class ContinuousScheduler:
         self.stats = SchedulerStats()
         self._t0 = time.perf_counter()
         self._gang_forming = False
+        self._warmed = False
 
     # -- submission ------------------------------------------------------------
 
@@ -259,17 +380,30 @@ class ContinuousScheduler:
     def _finish(self, req: Request) -> None:
         req.state = FINISHED
         req.finished_tick = self.tick
+        self.stats.count_evicted()
         if req.slot >= 0:
             self.pool.free(req.slot)
             del self._slot_req[req.slot]
             req.slot = -1
 
     def _token_done(self, req: Request, tok: np.ndarray) -> bool:
-        """Record one generated token; True when the request is finished."""
+        """Record one generated token; True when the request is finished.
+
+        TTFT is measured admission-to-first-token (what the request waited
+        once a slot was granted); ITL is the wall gap between a request's
+        consecutive tokens.
+        """
         req.out.append(tok)
+        now = time.perf_counter() - self._t0
+        ttft = itl = None
         if req.first_token_s < 0:
-            req.first_token_s = time.perf_counter() - self._t0
-        self.stats.tokens_out += 1
+            req.first_token_s = now
+            if req.admitted_s >= 0:
+                ttft = now - req.admitted_s
+        elif req.last_token_s >= 0:
+            itl = now - req.last_token_s
+        req.last_token_s = now
+        self.stats.count_token(ttft, itl)
         if req.eos_id is not None and tok.ndim == 0 and int(tok) == req.eos_id:
             return True
         return len(req.out) >= req.max_new_tokens
@@ -294,6 +428,8 @@ class ContinuousScheduler:
             req.state = PREFILLING
             req.slot = slot
             req.admitted_tick = self.tick
+            req.admitted_s = time.perf_counter() - self._t0
+            self.stats.count_admitted()
             if self.chunked_prefill:
                 # PREFILLING-with-progress: the slot is claimed (pos = -1,
                 # masked out of decode) and the prompt trickles in one
@@ -303,12 +439,15 @@ class ContinuousScheduler:
                 self._prefilling.append(req)
                 continue
             t0 = time.perf_counter()
-            first, cache_one = self.engine.prefill_request(req.prompt)
-            first = jax.block_until_ready(first)
-            self.pool.write_prefill(
-                slot, cache_one, self.engine.prompt_positions(req.prompt)
-            )
-            self.stats.prefill_s += time.perf_counter() - t0
+            with _obs_trace.span(
+                "serve.prefill", rid=req.rid, prompt_len=req.prompt_len
+            ):
+                first, cache_one = self.engine.prefill_request(req.prompt)
+                first = jax.block_until_ready(first)
+                self.pool.write_prefill(
+                    slot, cache_one, self.engine.prompt_positions(req.prompt)
+                )
+            self.stats.add_prefill(time.perf_counter() - t0)
             tok = np.asarray(first)[0]  # (1,) or (1, ncb)
             self._start_decoding(req, tok)
 
@@ -332,36 +471,42 @@ class ContinuousScheduler:
             off, length = req.chunks[req.chunk_idx]
             last = req.chunk_idx == len(req.chunks) - 1
             t0 = time.perf_counter()
-            tokens = req.prompt["tokens"][:, off : off + length]
-            # The working batch-1 cache is carried across chunks on the
-            # request (one gather at the first chunk, not one per chunk);
-            # co-scheduled decode steps cannot touch a pos=-1 slot's rows,
-            # so the carried view never goes stale.
-            if req.chunk_idx:
-                cache_one = req.staging
-            elif staged:
-                cache_one = self.pool.model.init_cache(
-                    1, self.pool.max_len, self.pool.dtype
+            with _obs_trace.span(
+                "serve.prefill_chunk",
+                rid=req.rid, offset=off, length=length, last=last,
+            ):
+                tokens = req.prompt["tokens"][:, off : off + length]
+                # The working batch-1 cache is carried across chunks on the
+                # request (one gather at the first chunk, not one per chunk);
+                # co-scheduled decode steps cannot touch a pos=-1 slot's rows,
+                # so the carried view never goes stale.
+                if req.chunk_idx:
+                    cache_one = req.staging
+                elif staged:
+                    cache_one = self.pool.model.init_cache(
+                        1, self.pool.max_len, self.pool.dtype
+                    )
+                else:
+                    cache_one = self.pool.gather_slot(req.slot)
+                tok, cache_one = self.engine.prefill_chunk(
+                    tokens, cache_one, off, last=last
                 )
-            else:
-                cache_one = self.pool.gather_slot(req.slot)
-            tok, cache_one = self.engine.prefill_chunk(
-                tokens, cache_one, off, last=last
-            )
-            jax.block_until_ready(tok if last else jax.tree.leaves(cache_one)[0])
-            if staged and not last:
-                req.staging = cache_one
-            else:
-                # Attention families scatter every chunk, so the pool holds
-                # the chunk's K/V at its absolute offset as soon as it
-                # lands; staged families write once, on the final chunk.
-                next_pos = (
-                    self.engine.prompt_positions(req.prompt) if last else None
+                jax.block_until_ready(
+                    tok if last else jax.tree.leaves(cache_one)[0]
                 )
-                self.pool.write_slot(req.slot, cache_one, next_pos)
-                req.staging = None if last else cache_one
-            self.stats.prefill_s += time.perf_counter() - t0
-            self.stats.prefill_chunks += 1
+                if staged and not last:
+                    req.staging = cache_one
+                else:
+                    # Attention families scatter every chunk, so the pool
+                    # holds the chunk's K/V at its absolute offset as soon as
+                    # it lands; staged families write once, on the final
+                    # chunk.
+                    next_pos = (
+                        self.engine.prompt_positions(req.prompt) if last else None
+                    )
+                    self.pool.write_slot(req.slot, cache_one, next_pos)
+                    req.staging = None if last else cache_one
+            self.stats.add_prefill(time.perf_counter() - t0, chunk=True)
             req.chunk_idx += 1
             budget -= 1
             if last:
@@ -377,15 +522,25 @@ class ContinuousScheduler:
         if not active:
             return False
         t0 = time.perf_counter()
-        nxt, self.pool.cache = self.engine.decode_slots(
-            jnp.asarray(self._slot_tok), self.pool.cache, self.pool.pos_vector()
-        )
-        nxt = jax.block_until_ready(nxt)
+        with _obs_trace.span(
+            "serve.decode_tick", tick=self.tick, active=len(active)
+        ):
+            nxt, self.pool.cache = self.engine.decode_slots(
+                jnp.asarray(self._slot_tok), self.pool.cache, self.pool.pos_vector()
+            )
+            nxt = jax.block_until_ready(nxt)
         dt = time.perf_counter() - t0
-        self.stats.decode_s += dt
-        self.stats.decode_steps += 1
-        self.stats.step_latency_s.append(dt)
-        self.stats.occupancy_sum += len(active) / self.pool.n_slots
+        self.stats.record_decode_step(dt, len(active) / self.pool.n_slots)
+        if _obs_metrics.enabled():
+            # Utilization attribution (DESIGN.md §11): divide the measured
+            # step into the FLOPs/roofline totals the engine's traced decode
+            # step recorded at compile time.
+            totals = self.engine.decode_totals
+            if totals.flops > 0 and dt > 0:
+                self.stats.record_utilization(
+                    _obs_attr.mfu(totals.flops, dt, dtype=self.engine.cfg.dtype),
+                    dt / totals.predicted_s if totals.predicted_s > 0 else 0.0,
+                )
         nxt_np = np.asarray(nxt)
         self.pool.advance(active)
         for slot in active:
@@ -413,7 +568,21 @@ class ContinuousScheduler:
         (Before the mixed-step model, prefill compiles were charged to
         ``prefill_s``; with prefill sharing decode ticks they would dominate
         the very p99 the chunking exists to bound.)
+
+        ``step`` invokes this automatically on its first call if the driver
+        never did, so manually driven schedulers get the same exclusion --
+        previously their first tick charged the decode compile straight into
+        the p50/p99 tick histograms (tests/test_obs.py regression-tests
+        this).
         """
+        self._warmed = True
+        with _obs_trace.span("serve.warmup"):
+            self._warmup_impl()
+        self.stats.set_gauges(
+            len(self.queue), self.pool.occupancy(), self.pool.bytes_resident()
+        )
+
+    def _warmup_impl(self) -> None:
         key_before = self.engine._key  # warmup must not advance sampling
         tok = jnp.asarray(np.zeros_like(self._slot_tok))
         pos = jnp.full((self.pool.n_slots,), -1, jnp.int32)
@@ -473,25 +642,41 @@ class ContinuousScheduler:
         ``stats.tick_latency_s`` -- the latency a decoding request actually
         experiences, prefill work included.
         """
+        if not self._warmed:
+            # Keep one-off compiles out of every latency histogram even when
+            # the driver steps manually and never called warmup() itself.
+            self.warmup()
         t0 = time.perf_counter()
         self._admit()
         chunks_before = self.stats.prefill_chunks
         if self.chunked_prefill:
             self._prefill_chunk_once()
         decoded = self._decode_once()
+        dt = time.perf_counter() - t0
         if decoded:
-            self.stats.tick_latency_s.append(time.perf_counter() - t0)
+            self.stats.record_tick_latency(dt)
         elif self.stats.prefill_chunks == chunks_before:
             # truly idle: no decode ran AND no prefill chunk landed
-            self.stats.idle_ticks += 1
+            self.stats.count_idle_tick()
         self.tick += 1
-        self.stats.ticks += 1
+        self.stats.count_tick(dt)
+        self.stats.set_gauges(len(self.queue), self.pool.occupancy())
         return self.pending()
 
     def run(
-        self, requests: list[Request] | None = None, *, max_ticks: int | None = None
+        self,
+        requests: list[Request] | None = None,
+        *,
+        max_ticks: int | None = None,
+        on_tick=None,
     ) -> dict[int, np.ndarray]:
-        """Drive to completion; returns {rid: generated tokens}."""
+        """Drive to completion; returns {rid: generated tokens}.
+
+        ``on_tick(scheduler)``, if given, is called after every tick --
+        the hook ``launch/serve --metrics-dir`` uses for periodic metric
+        snapshots.  Its cost is the caller's: it runs outside the tick's
+        latency window but inside the run.
+        """
         done: list[Request] = []
         if requests:
             for r in sorted(requests, key=lambda r: r.arrival):
@@ -504,4 +689,6 @@ class ContinuousScheduler:
             if self.tick >= limit:
                 raise RuntimeError(f"scheduler did not drain in {limit} ticks")
             self.step()
+            if on_tick is not None:
+                on_tick(self)
         return {r.rid: r.tokens() for r in done}

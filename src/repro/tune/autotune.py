@@ -16,6 +16,8 @@ import dataclasses
 from typing import Callable
 
 from repro.core import dse, hw
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.tune import candidates as cand_mod
 from repro.tune import measure as measure_mod
 from repro.tune.cache import CacheKey, PlanCache, TunedPlan, default_cache
@@ -99,7 +101,9 @@ def autotune(
     if not force:
         hit = cache.lookup(key)
         if hit is not None:
+            _metrics.inc("tune.autotune.cache_hit", backend=backend)
             return TuneResult(key=key, winner=hit, cache_hit=True)
+    _metrics.inc("tune.autotune.cache_miss", backend=backend)
 
     cands = cand_mod.generate(m, n, k, dtype=dtype, chip=chip, top_k=top_k, tp=tp)
 
@@ -118,11 +122,16 @@ def autotune(
             )
 
     measured: list[tuple[dse.DSERecord, measure_mod.Measurement]] = []
-    for c in cands:
-        ms = measure_fn(c.record)
-        if ms is None:
-            continue
-        measured.append((c.record.with_measurement(ms.best_us), ms))
+    with _trace.span(
+        "tune.autotune", m=int(m), n=int(n), k=int(k),
+        dtype=dtype, backend=backend, tp=int(tp),
+    ):
+        for c in cands:
+            ms = measure_fn(c.record)
+            if ms is None:
+                continue
+            measured.append((c.record.with_measurement(ms.best_us), ms))
+    _metrics.inc("tune.autotune.measurements", len(measured), backend=backend)
     if not measured:
         raise ValueError(
             f"no measurable candidate for ({m},{n},{k}) on backend {backend!r}"

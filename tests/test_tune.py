@@ -254,7 +254,8 @@ def test_autotune_reference_backend_measures_reference(cache_path):
     # the dispatch path picks it up when geometry divides
     from repro.core import ops as core_ops
 
-    assert core_ops._reference_blocks(256, 256, 256, jnp.dtype("float32")) == r.block
+    blocks, source = core_ops._reference_blocks(256, 256, 256, jnp.dtype("float32"))
+    assert blocks == r.block and source == "tuned"
 
 
 def test_autotune_rejects_unmeasurable_backend(cache_path):
@@ -319,9 +320,12 @@ def test_reference_backend_prefers_tuned_plan(cache_path):
 
     key = CacheKey("reference", hw.get_chip(None).name, 256, 256, 256, "float32")
     tune_cache.default_cache().store(key, TunedPlan(64, 64, 64, 1.0, 1.0, "stub"))
-    assert core_ops._reference_blocks(256, 256, 256, jnp.dtype("float32")) == (64, 64, 64)
+    assert core_ops._reference_blocks(256, 256, 256, jnp.dtype("float32")) == (
+        (64, 64, 64),
+        "tuned",
+    )
     # non-dividing problem ignores the entry (no entry for 96 anyway)
-    bm, bn, bk = core_ops._reference_blocks(96, 96, 96, jnp.dtype("float32"))
+    (bm, bn, bk), _ = core_ops._reference_blocks(96, 96, 96, jnp.dtype("float32"))
     assert 96 % bm == 0 and 96 % bn == 0 and 96 % bk == 0
     # numerics through the public API with a tuned reference plan
     a = jax.random.normal(jax.random.PRNGKey(2), (256, 256), jnp.float32)
