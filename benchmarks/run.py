@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m benchmarks.run [table1|table2|table6|roofline|tune|serve|tp]
 
+With ``--ledger PATH`` (or ``REPRO_LEDGER=PATH`` in the environment) every
+``BENCH {json}`` row each table prints is also appended to the JSONL
+regression ledger at PATH, keyed by (git sha, bench, variant, chip, dtype);
+``python -m repro.obs ledger compare --ledger PATH`` then gates the run
+against its previous recording (DESIGN.md §12, CI ``ledger-gate`` job).
+
   table1    DSE over block shapes: analytical fitter/roofline columns plus
             the measured-time column (the f_max analogue) from repro.tune
   table2    scaling
@@ -30,8 +36,30 @@
 
 from __future__ import annotations
 
+import os
 import sys
 import time
+
+
+def _ledger_path(argv: list[str]) -> tuple[str | None, list[str]]:
+    """Extract ``--ledger PATH`` from argv (REPRO_LEDGER as fallback)."""
+    path = os.environ.get("REPRO_LEDGER") or None
+    rest: list[str] = []
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--ledger":
+            if i + 1 >= len(argv):
+                raise SystemExit("--ledger needs a PATH argument")
+            path = argv[i + 1]
+            i += 2
+            continue
+        if argv[i].startswith("--ledger="):
+            path = argv[i].split("=", 1)[1]
+            i += 1
+            continue
+        rest.append(argv[i])
+        i += 1
+    return path, rest
 
 
 def main() -> None:
@@ -59,7 +87,13 @@ def main() -> None:
         "quant": quant_matmul.run,
         "obs": obs_report.run,
     }
-    want = sys.argv[1:] or list(tables)
+    ledger_path, want = _ledger_path(sys.argv[1:])
+    want = want or list(tables)
+    ledger = None
+    if ledger_path:
+        from repro.obs import ledger as obs_ledger
+
+        ledger = obs_ledger.Ledger(ledger_path)
     for name in want:
         t0 = time.perf_counter()
         rows = tables[name]()
@@ -67,6 +101,12 @@ def main() -> None:
         print(f"# === {name} ({dt:.1f}s) ===")
         for r in rows:
             print(r)
+        if ledger is not None:
+            from repro.obs import ledger as obs_ledger
+
+            n = obs_ledger.record_bench_rows(ledger, name, rows)
+            if n:
+                print(f"# ledger: {n} entries -> {ledger.path}")
         print()
 
 

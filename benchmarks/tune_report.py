@@ -1,14 +1,19 @@
 """Autotuner report: the closed DSE loop over representative GEMM problems.
 
-For each problem this runs ``repro.tune.autotune`` (serving from the plan
-cache when warm) and prints the measured winner next to the analytical
-best -- the at-a-glance answer to "does measuring beat the model?", which is
-the entire argument of the paper's Table I and of the autotuner subsystem.
+For each (problem, dtype) this runs ``repro.tune.autotune`` (serving from
+the plan cache when warm) and prints the measured winner next to the
+analytical best -- the at-a-glance answer to "does measuring beat the
+model?", which is the entire argument of the paper's Table I and of the
+autotuner subsystem.  The dtype axis covers bf16 alongside the quantized
+serving dtypes (int8/fp8, DESIGN.md §10): narrow streams double the
+per-DSP MAC rate, so their winners and bounds differ from bf16's.
 
     PYTHONPATH=src python -m benchmarks.run tune
 """
 
 from __future__ import annotations
+
+import json
 
 from repro.core import dse, hw
 from repro.tune import autotune
@@ -21,22 +26,50 @@ PROBLEMS = (
     (512, 512, 2048),
 )
 
+# bf16 plus the quantized serving dtypes (the "fp8" alias resolves to
+# float8_e4m3fn inside autotune/dse).
+DTYPES = ("bfloat16", "int8", "fp8")
+
 
 def run(top_k: int = 4, repeats: int = 2) -> list[str]:
     chip = hw.get_chip(None)
-    rows = ["tune_report.problem,analytical_best,measured_winner,best_us,method,cache"]
-    for m, n, k in PROBLEMS:
-        analytical = dse.best(dse.explore(m, n, k, chip=chip))
-        result = autotune(
-            m, n, k, chip=chip, top_k=top_k, repeats=repeats, warmup=1
-        )
-        w = result.winner
-        rows.append(
-            f"{m}x{n}x{k},{analytical.ident},{w.bm}x{w.bn}x{w.bk},"
-            f"{w.best_us:.1f},{w.method},{'hit' if result.cache_hit else 'miss'}"
-        )
+    rows = [
+        "tune_report.problem,dtype,analytical_best,measured_winner,"
+        "best_us,method,cache"
+    ]
+    bench: list[str] = []
+    for dtype in DTYPES:
+        in_dtype = "float8_e4m3fn" if dtype == "fp8" else dtype
+        for m, n, k in PROBLEMS:
+            analytical = dse.best(
+                dse.explore(m, n, k, chip=chip, in_dtype=in_dtype)
+            )
+            result = autotune(
+                m, n, k, dtype=dtype, chip=chip, top_k=top_k,
+                repeats=repeats, warmup=1,
+            )
+            w = result.winner
+            rows.append(
+                f"{m}x{n}x{k},{dtype},{analytical.ident},{w.bm}x{w.bn}x{w.bk},"
+                f"{w.best_us:.1f},{w.method},"
+                f"{'hit' if result.cache_hit else 'miss'}"
+            )
+            bench.append(
+                "BENCH "
+                + json.dumps(
+                    {
+                        "bench": "tune",
+                        "problem": f"{m}x{n}x{k}",
+                        "dtype": dtype,
+                        "best_us": round(w.best_us, 2),
+                        "method": w.method,
+                        "cache_hit": result.cache_hit,
+                    },
+                    sort_keys=True,
+                )
+            )
     from repro.tune.cache import default_cache
 
     cache = default_cache()
-    rows.append(f"cache_path,{cache.path},entries={len(cache)},,,")
-    return rows
+    rows.append(f"cache_path,{cache.path},entries={len(cache)},,,,")
+    return rows + bench

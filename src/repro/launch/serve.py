@@ -52,7 +52,11 @@ import time
 import jax
 
 from repro import configs
-from repro.data.synthetic import make_batch, make_request_trace
+from repro.data.synthetic import (
+    make_adversarial_trace,
+    make_batch,
+    make_request_trace,
+)
 from repro.models.registry import get_model
 from repro.serving import (
     ContinuousScheduler,
@@ -62,8 +66,13 @@ from repro.serving import (
 )
 
 
-def _dump_metrics(metrics_dir: str, extra_registry=None, extra: dict | None = None):
-    """Write the merged metrics snapshot to ``metrics_dir/snapshot.json``
+def _dump_metrics(
+    metrics_dir: str,
+    extra_registry=None,
+    extra: dict | None = None,
+    name: str = "snapshot.json",
+):
+    """Write the merged metrics snapshot to ``metrics_dir/<name>``
     (process-wide dispatch registry + the scheduler's private registry)."""
     from repro import obs
 
@@ -72,10 +81,23 @@ def _dump_metrics(metrics_dir: str, extra_registry=None, extra: dict | None = No
         regs.append(extra_registry)
     doc = obs.snapshot_doc(*regs, extra=extra)
     os.makedirs(metrics_dir, exist_ok=True)
-    path = os.path.join(metrics_dir, "snapshot.json")
+    path = os.path.join(metrics_dir, name)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
     return path
+
+
+def _prune_tick_snapshots(metrics_dir: str, keep: int) -> None:
+    """Keep only the newest ``keep`` periodic ``snapshot-<tick>.json`` files
+    (the final merged ``snapshot.json`` is never pruned)."""
+    ticks = sorted(
+        f
+        for f in os.listdir(metrics_dir)
+        if f.startswith("snapshot-") and f.endswith(".json")
+    )
+    for stale in ticks[:-keep] if keep > 0 else ticks:
+        with contextlib.suppress(OSError):
+            os.remove(os.path.join(metrics_dir, stale))
 
 
 def _dump_trace(metrics_dir: str) -> str:
@@ -154,22 +176,45 @@ def run_synchronized(model, params, args) -> None:
 
 def run_continuous(model, params, args) -> None:
     cfg = model.cfg
-    trace = make_request_trace(
-        cfg,
-        n_requests=args.requests,
-        mean_prompt=args.mean_prompt,
-        mean_gen=args.mean_gen,
-        rate=args.rate,
-        seed=args.seed,
-        max_prompt=args.prompt_len,
-        max_gen=args.gen,
-    )
+    if args.adversarial:
+        # The long-prompt worst case: short requests decode steadily, one
+        # long prompt lands mid-run.  The trace SLO budgets are meant to
+        # trip on (--slo-ttft-ms / --slo-itl-ms acceptance demo).
+        trace = make_adversarial_trace(
+            cfg,
+            n_short=max(1, args.requests - 1),
+            short_prompt=args.mean_prompt,
+            short_gen=args.mean_gen,
+            long_prompt=args.prompt_len,
+            seed=args.seed,
+        )
+    else:
+        trace = make_request_trace(
+            cfg,
+            n_requests=args.requests,
+            mean_prompt=args.mean_prompt,
+            mean_gen=args.mean_gen,
+            rate=args.rate,
+            seed=args.seed,
+            max_prompt=args.prompt_len,
+            max_gen=args.gen,
+        )
     prefix = cfg.n_patches if cfg.frontend == "vit" else 0
     max_len = (
         max(t["prompt"]["tokens"].shape[1] + t["max_new_tokens"] for t in trace)
         + prefix
     )
     engine = _build_engine(model, params, args, max_len, args.slots)
+    slo = None
+    if args.slo_ttft_ms or args.slo_itl_ms or args.slo_queue_wait_ms:
+        from repro import obs
+
+        slo = obs.SLOSpec(
+            ttft_ms=args.slo_ttft_ms,
+            itl_ms=args.slo_itl_ms,
+            queue_wait_ms=args.slo_queue_wait_ms,
+        )
+        print(f"slo budgets: {slo.describe()}")
     sched = ContinuousScheduler(
         engine,
         policy=args.policy,
@@ -177,16 +222,31 @@ def run_continuous(model, params, args) -> None:
         chunk_size=args.chunk_size,
         chunk_budget=args.chunk_budget,
         quantize_kv=args.quantize == "kv8",
+        slo=slo,
     )
+    if args.metrics_dir:
+        # Flight recorder (DESIGN.md §12): postmortem bundles on SLO
+        # violation or engine exception, snapshotting both registries.
+        from repro import obs
+
+        sched.flight_recorder = obs.FlightRecorder(
+            args.metrics_dir,
+            registries=(obs.get_registry(), sched.stats.registry),
+        )
     on_tick = None
     if args.metrics_dir:
         interval = max(1, args.metrics_interval)
+        keep = max(1, args.metrics_keep)
 
         def on_tick(s) -> None:
             if s.tick % interval == 0:
                 _dump_metrics(
-                    args.metrics_dir, s.stats.registry, extra=s.stats.summary()
+                    args.metrics_dir,
+                    s.stats.registry,
+                    extra=s.stats.summary(),
+                    name=f"snapshot-{s.tick:06d}.json",
                 )
+                _prune_tick_snapshots(args.metrics_dir, keep)
 
     results = sched.run(requests_from_trace(trace), on_tick=on_tick)
 
@@ -201,6 +261,17 @@ def run_continuous(model, params, args) -> None:
         f"tick latency p50 {s['p50_tick_ms']:.2f} ms / p99 {s['p99_tick_ms']:.2f} ms | "
         f"mean slot occupancy {s['mean_occupancy']:.2%}"
     )
+    if slo is not None:
+        print(
+            f"slo: {s['requests_conformant']}/{s['requests_finished']} requests "
+            f"conformant, {s['slo_violations']} violations | goodput "
+            f"{s['goodput_toks']} toks, {s['goodput_tok_per_s']:.1f} tok/s "
+            f"(raw {s['tok_per_s']:.1f})"
+        )
+        fr = sched.flight_recorder
+        if fr is not None and fr.paths:
+            print(f"postmortem bundles: {len(fr.paths)} in {args.metrics_dir}"
+                  + (f" ({fr.suppressed} suppressed)" if fr.suppressed else ""))
     print(engine.decode_plan_report())
     rid0 = min(results)
     print(f"sample tokens (request {rid0}):", results[rid0][:16].tolist())
@@ -281,9 +352,10 @@ def main() -> None:
     ap.add_argument(
         "--metrics-dir",
         default=None,
-        help="dump obs telemetry here (DESIGN.md §11): snapshot.json "
-        "(metrics registry, periodically overwritten in continuous mode) "
-        "and trace.json (Chrome trace_event timeline, final); validate with "
+        help="dump obs telemetry here (DESIGN.md §11-12): final snapshot.json "
+        "+ periodic snapshot-<tick>.json (continuous mode, keep-last-K), "
+        "trace.json (Chrome trace_event timeline), and postmortem-*.json "
+        "flight-recorder bundles on SLO violations; validate with "
         "python -m repro.obs <files>",
     )
     ap.add_argument(
@@ -291,7 +363,43 @@ def main() -> None:
         type=int,
         default=50,
         metavar="TICKS",
-        help="ticks between periodic snapshot.json rewrites (continuous mode)",
+        help="ticks between periodic snapshot-<tick>.json dumps "
+        "(continuous mode; the final merged snapshot.json is always written)",
+    )
+    ap.add_argument(
+        "--metrics-keep",
+        type=int,
+        default=16,
+        metavar="K",
+        help="keep only the newest K periodic snapshot-<tick>.json files",
+    )
+    ap.add_argument(
+        "--adversarial",
+        action="store_true",
+        help="replace the Poisson trace with the long-prompt adversarial "
+        "trace (requests-1 short requests at tick 0 + one --prompt-len "
+        "prompt mid-run; continuous mode only)",
+    )
+    # SLO budgets (DESIGN.md §12): per-request latency budgets; goodput
+    # counts only tokens from requests that met every configured budget.
+    ap.add_argument(
+        "--slo-ttft-ms",
+        type=float,
+        default=None,
+        help="TTFT budget (admission -> first token), milliseconds",
+    )
+    ap.add_argument(
+        "--slo-itl-ms",
+        type=float,
+        default=None,
+        help="inter-token latency budget (gap between a request's "
+        "consecutive tokens, co-scheduled prefill stalls included), ms",
+    )
+    ap.add_argument(
+        "--slo-queue-wait-ms",
+        type=float,
+        default=None,
+        help="queue-wait budget (eligible -> slot granted), milliseconds",
     )
     args = ap.parse_args()
 

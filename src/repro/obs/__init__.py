@@ -9,7 +9,14 @@ The cross-cutting layer every other subsystem reports through:
                         ``trace_event`` JSON (Perfetto-loadable);
   * ``attribution``  -- per-dispatch GEMM accounting: MFU vs the dtype-aware
                         chip peak, and measured-vs-roofline model residual
-                        (the paper's achieved-vs-f_max gap, live).
+                        (the paper's achieved-vs-f_max gap, live);
+  * ``slo``          -- declarative per-request latency budgets (``SLOSpec``),
+                        conformance tracking + goodput, and the flight
+                        recorder that dumps postmortem bundles on violation
+                        or engine exception (DESIGN.md §12);
+  * ``ledger``       -- append-only JSONL benchmark ledger keyed by
+                        (git sha, bench, variant, chip, dtype); ``python -m
+                        repro.obs ledger compare`` is the CI regression gate.
 
 Recording is process-wide switchable: ``REPRO_OBS=0`` (env) or
 ``obs.disabled()`` (scope) turns every record call into one boolean check --
@@ -41,23 +48,48 @@ from repro.obs.metrics import (  # noqa: F401
     snapshot_doc,
     validate_snapshot,
 )
+from repro.obs.ledger import (  # noqa: F401
+    Ledger,
+    compare_entries,
+    compare_latest,
+    metric_direction,
+    record_bench_rows,
+)
+from repro.obs.slo import (  # noqa: F401
+    ConformanceTracker,
+    FlightRecorder,
+    SLOSpec,
+    validate_postmortem,
+)
 from repro.obs.trace import (  # noqa: F401
     Tracer,
+    current_request,
     get_tracer,
     instant,
     instrument,
+    request_scope,
+    request_timeline,
     span,
+    trace_rids,
     validate_chrome_trace,
+    validate_request_timeline,
 )
 
 __all__ = [
+    "ConformanceTracker",
     "Counter",
+    "FlightRecorder",
     "Gauge",
     "GemmTotals",
     "Histogram",
+    "Ledger",
     "Registry",
+    "SLOSpec",
     "Tracer",
     "collecting",
+    "compare_entries",
+    "compare_latest",
+    "current_request",
     "disabled",
     "enable",
     "enabled",
@@ -66,15 +98,22 @@ __all__ = [
     "inc",
     "instant",
     "instrument",
+    "metric_direction",
     "mfu",
     "observe",
     "plan_hit_rate",
+    "record_bench_rows",
     "record_gemm",
+    "request_scope",
+    "request_timeline",
     "reset",
     "roofline_seconds",
     "set_gauge",
     "snapshot_doc",
     "span",
+    "trace_rids",
     "validate_chrome_trace",
+    "validate_postmortem",
+    "validate_request_timeline",
     "validate_snapshot",
 ]

@@ -1,19 +1,34 @@
-"""Validate obs artefacts from the command line (CI's schema gate).
+"""Obs artefact validation + the benchmark-ledger CLI (CI's gates).
 
-    PYTHONPATH=src python -m repro.obs snapshot.json trace.json ...
+Validate artefacts (exit 0 = all valid, problems printed one per line)::
 
-Files named ``trace*.json`` (or containing a ``traceEvents`` key) validate
-against the Chrome ``trace_event`` structure; everything else against the
-metrics snapshot schema.  Exit code 0 = all valid; problems are printed one
-per line and exit code is 1.
+    PYTHONPATH=src python -m repro.obs snapshot.json trace.json postmortem-*.json
+
+Files containing a ``traceEvents`` key validate against the Chrome
+``trace_event`` structure, ``kind == "postmortem"`` against the
+flight-recorder bundle schema, everything else against the metrics snapshot
+schema.
+
+Ledger subcommands (DESIGN.md §12)::
+
+    python -m repro.obs ledger show    --ledger PATH
+    python -m repro.obs ledger record  --ledger PATH --bench NAME --json '{...}'
+    python -m repro.obs ledger compare --ledger PATH [--threshold 0.05]
+                                       [--bench NAME] [--verbose]
+
+``compare`` diffs each (bench, variant, chip, dtype) key's latest entry
+against the previous one and exits 1 when any metric regresses past the
+threshold -- the CI ``ledger-gate`` job.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 
 from repro.obs.metrics import validate_snapshot
+from repro.obs.slo import validate_postmortem
 from repro.obs.trace import validate_chrome_trace
 
 
@@ -25,15 +40,14 @@ def validate_file(path: str) -> list[str]:
         return [f"unreadable JSON: {e}"]
     if isinstance(doc, dict) and "traceEvents" in doc:
         return validate_chrome_trace(doc)
+    if isinstance(doc, dict) and doc.get("kind") == "postmortem":
+        return validate_postmortem(doc)
     return validate_snapshot(doc)
 
 
-def main(argv: list[str]) -> int:
-    if not argv:
-        print(__doc__)
-        return 2
+def _validate_main(paths: list[str]) -> int:
     failed = False
-    for path in argv:
+    for path in paths:
         errs = validate_file(path)
         if errs:
             failed = True
@@ -42,6 +56,85 @@ def main(argv: list[str]) -> int:
         else:
             print(f"{path}: OK")
     return 1 if failed else 0
+
+
+def ledger_main(argv: list[str]) -> int:
+    from repro.obs import ledger as _ledger
+
+    ap = argparse.ArgumentParser(prog="python -m repro.obs ledger")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    show = sub.add_parser("show", help="list ledger entries")
+    show.add_argument("--ledger", required=True, help="JSONL ledger path")
+
+    rec = sub.add_parser("record", help="append one entry (CI injection / manual)")
+    rec.add_argument("--ledger", required=True)
+    rec.add_argument("--bench", required=True)
+    rec.add_argument("--json", required=True, help="metrics as a JSON object")
+    rec.add_argument("--variant", default=None)
+    rec.add_argument("--chip", default=None)
+    rec.add_argument("--dtype", default=None)
+    rec.add_argument("--sha", default=None)
+
+    cmp_ = sub.add_parser("compare", help="latest vs baseline per key; exit 1 on regression")
+    cmp_.add_argument("--ledger", required=True)
+    cmp_.add_argument("--threshold", type=float, default=0.05,
+                      help="relative regression tolerance (default 5%%)")
+    cmp_.add_argument("--bench", default=None, help="restrict to one benchmark")
+    cmp_.add_argument("--skip", default=None, metavar="REGEX",
+                      help="exclude metrics whose name matches (smoke-run "
+                      "tail percentiles are noise, not signal)")
+    cmp_.add_argument("--verbose", action="store_true",
+                      help="print every metric delta, not just regressions")
+
+    args = ap.parse_args(argv)
+    ledger = _ledger.Ledger(args.ledger)
+
+    if args.cmd == "show":
+        entries, bad = ledger.entries()
+        for e in entries:
+            print(
+                f"{e['git_sha'][:12]} {_ledger.entry_key(e).ident()} "
+                f"({len(e['metrics'])} metrics)"
+            )
+        print(f"{len(entries)} entries" + (f", {bad} corrupted lines skipped" if bad else ""))
+        return 0
+
+    if args.cmd == "record":
+        try:
+            metrics = json.loads(args.json)
+        except ValueError as e:
+            print(f"--json is not valid JSON: {e}")
+            return 2
+        if not isinstance(metrics, dict):
+            print("--json must be a JSON object")
+            return 2
+        entry = ledger.record(
+            args.bench, metrics, variant=args.variant, chip=args.chip,
+            dtype=args.dtype, sha=args.sha,
+        )
+        print(f"recorded {_ledger.entry_key(entry).ident()} -> {ledger.path}")
+        return 0
+
+    # compare
+    entries, bad = ledger.entries()
+    if bad:
+        print(f"note: {bad} corrupted ledger lines skipped")
+    results = _ledger.compare_latest(
+        ledger, threshold=args.threshold, bench=args.bench, skip=args.skip
+    )
+    for line in _ledger.format_compare(results, verbose=args.verbose):
+        print(line)
+    return 1 if any(not r.ok for r in results) else 0
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    if argv[0] == "ledger":
+        return ledger_main(argv[1:])
+    return _validate_main(argv)
 
 
 if __name__ == "__main__":

@@ -99,6 +99,20 @@ def _format_series(name: str, key: tuple[tuple[str, str], ...]) -> str:
     return f"{name}{{{inner}}}"
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus exposition-format label-value escaping: backslash, double
+    quote, and line feed are the three characters the format reserves."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _prom_series(name: str, key: tuple[tuple[str, str], ...], suffix: str = "") -> str:
+    base = name.replace(".", "_") + suffix
+    if not key:
+        return base
+    inner = ",".join(f'{k}="{_escape_label_value(v)}"' for k, v in key)
+    return f"{base}{{{inner}}}"
+
+
 class Counter:
     """Monotonic float counter."""
 
@@ -291,22 +305,28 @@ class Registry:
 
     def to_prometheus(self) -> str:
         """Prometheus-style text exposition (counters as ``_total``,
-        histogram quantiles as pre-aggregated gauge series)."""
+        histogram quantiles as pre-aggregated gauge series).
+
+        Rendered from the raw instruments, not ``snapshot()``'s formatted
+        series keys, so label values get exposition-format escaping
+        (``\\``, ``"``, and newlines -- a label carrying an error message
+        or a file path must not be able to break the line format).
+        """
+        with self._lock:
+            counters = sorted(self._counters.items())
+            gauges = sorted(self._gauges.items())
+            hists = sorted(self._hists.items())
         lines: list[str] = []
-        snap = self.snapshot()
-        for series, v in snap["counters"].items():
-            name, brace, rest = series.partition("{")
-            lines.append(f"{name.replace('.', '_')}_total{brace}{rest} {v:g}")
-        for series, v in snap["gauges"].items():
-            name, brace, rest = series.partition("{")
-            lines.append(f"{name.replace('.', '_')}{brace}{rest} {v:g}")
-        for series, h in snap["histograms"].items():
-            name, brace, rest = series.partition("{")
-            base = name.replace(".", "_")
-            lines.append(f"{base}_count{brace}{rest} {h['count']:g}")
-            lines.append(f"{base}_sum{brace}{rest} {h['sum']:g}")
+        for (name, key), c in counters:
+            lines.append(f"{_prom_series(name, key, '_total')} {c.value:g}")
+        for (name, key), g in gauges:
+            lines.append(f"{_prom_series(name, key)} {g.value:g}")
+        for (name, key), h in hists:
+            snap = h.snapshot()
+            lines.append(f"{_prom_series(name, key, '_count')} {snap['count']:g}")
+            lines.append(f"{_prom_series(name, key, '_sum')} {snap['sum']:g}")
             for q in ("p50", "p90", "p99"):
-                lines.append(f"{base}_{q}{brace}{rest} {h[q]:g}")
+                lines.append(f"{_prom_series(name, key, '_' + q)} {snap[q]:g}")
         return "\n".join(lines) + "\n"
 
     def write_json(self, path, extra: dict | None = None) -> dict:

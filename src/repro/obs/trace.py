@@ -20,11 +20,21 @@ duration, tagged ``cat="trace"``, carrying their payload (bytes, shapes) in
 The buffer is a bounded deque: a long-running server keeps the most recent
 ``capacity`` events and drops the oldest -- export never grows without
 bound, matching the metrics registry's sliding-window histograms.
+
+**Request-scoped tracing** (DESIGN.md §12): serving code wraps per-request
+work in ``request_scope(rid)``; every span/instant recorded inside the scope
+is tagged ``args.rid`` automatically (an explicit ``rid=`` argument wins).
+Batched work touching several requests at once tags ``args.rids`` instead
+(the decode tick's per-slot attribution).  ``request_timeline`` filters an
+exported trace back down to one request's events and
+``validate_request_timeline`` checks the admission -> first-token ->
+eviction chain the scheduler is contracted to emit.
 """
 
 from __future__ import annotations
 
 import contextlib
+import contextvars
 import functools
 import json
 import os
@@ -34,6 +44,33 @@ from collections import deque
 from typing import Any
 
 from repro.obs import metrics as _metrics
+
+# ---------------------------------------------------------------------------
+# Request scope: which request the current (host) control flow serves.
+# ---------------------------------------------------------------------------
+
+_REQUEST: contextvars.ContextVar[int | None] = contextvars.ContextVar(
+    "repro_obs_request", default=None
+)
+
+
+def current_request() -> int | None:
+    """The rid bound by the innermost ``request_scope`` (None outside)."""
+    return _REQUEST.get()
+
+
+@contextlib.contextmanager
+def request_scope(rid: int):
+    """Attribute every span/instant in the scope to request ``rid``.
+
+    A contextvar, so it nests (inner request wins) and is safe under the
+    router-layer threading the metrics registry already anticipates.
+    """
+    token = _REQUEST.set(rid)
+    try:
+        yield
+    finally:
+        _REQUEST.reset(token)
 
 
 class Tracer:
@@ -89,6 +126,10 @@ class Tracer:
             payload = {k: v for k, v in args.items() if v is not None}
             if err is not None:
                 payload["error"] = err
+            if "rid" not in payload and "rids" not in payload:
+                rid = _REQUEST.get()
+                if rid is not None:
+                    payload["rid"] = rid
             if payload:
                 ev["args"] = payload
             self._push(ev)
@@ -106,8 +147,13 @@ class Tracer:
             "pid": os.getpid(),
             "tid": threading.get_ident() & 0xFFFF,
         }
-        if args:
-            ev["args"] = dict(args)
+        payload = dict(args)
+        if "rid" not in payload and "rids" not in payload:
+            rid = _REQUEST.get()
+            if rid is not None:
+                payload["rid"] = rid
+        if payload:
+            ev["args"] = payload
         self._push(ev)
 
     def instrument(self, name: str | None = None, cat: str = ""):
@@ -183,6 +229,94 @@ def validate_chrome_trace(doc: Any) -> list[str]:
                 errs.append(f"traceEvents[{i}].{field} missing or mistyped")
         if ev.get("ph") == "X" and not isinstance(ev.get("dur"), (int, float)):
             errs.append(f"traceEvents[{i}]: complete event without dur")
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# Request timelines (reconstructed from rid/rids tagging).
+# ---------------------------------------------------------------------------
+
+
+def _event_list(doc_or_events: Any) -> list[dict]:
+    if isinstance(doc_or_events, dict):
+        return list(doc_or_events.get("traceEvents", []))
+    return list(doc_or_events)
+
+
+def request_timeline(doc_or_events: Any, rid: int) -> list[dict]:
+    """Events attributed to request ``rid``, in timestamp order.
+
+    Accepts either an exported Chrome trace document or a raw event list.
+    An event belongs to the timeline when ``args.rid == rid`` or when
+    ``rid`` appears in a batched ``args.rids`` list (decode ticks).
+    """
+    out = []
+    for ev in _event_list(doc_or_events):
+        args = ev.get("args") or {}
+        if args.get("rid") == rid or rid in (args.get("rids") or ()):
+            out.append(ev)
+    return sorted(out, key=lambda e: e.get("ts", 0.0))
+
+
+def trace_rids(doc_or_events: Any) -> set[int]:
+    """Every rid mentioned anywhere in the trace (rid or rids tagging)."""
+    rids: set[int] = set()
+    for ev in _event_list(doc_or_events):
+        args = ev.get("args") or {}
+        if args.get("rid") is not None:
+            rids.add(args["rid"])
+        rids.update(args.get("rids") or ())
+    return rids
+
+
+def validate_request_timeline(doc_or_events: Any, rid: int) -> list[str]:
+    """Check one request's span chain; returns problems ([] = ok).
+
+    The scheduler contract (DESIGN.md §12): a served request's trace holds
+    a ``serve.admit`` instant, at least one prefill span (``serve.prefill``
+    or ``serve.prefill_chunk``), a ``serve.first_token`` instant, and a
+    ``serve.evict`` instant, in that timestamp order, with every prefill
+    span between admission and first token.  Only meaningful while the
+    whole request fits in the tracer ring buffer (a dropped prefix is the
+    ring's documented behaviour, not a scheduler bug).
+    """
+    tl = request_timeline(doc_or_events, rid)
+    errs: list[str] = []
+
+    def first_ts(name: str) -> float | None:
+        for ev in tl:
+            if ev["name"] == name:
+                return ev["ts"]
+        return None
+
+    admit = first_ts("serve.admit")
+    first_tok = first_ts("serve.first_token")
+    evict = first_ts("serve.evict")
+    prefills = [
+        ev for ev in tl if ev["name"] in ("serve.prefill", "serve.prefill_chunk")
+    ]
+    for name, ts in (
+        ("serve.admit", admit),
+        ("serve.first_token", first_tok),
+        ("serve.evict", evict),
+    ):
+        if ts is None:
+            errs.append(f"rid {rid}: missing {name}")
+    if not prefills:
+        errs.append(f"rid {rid}: no prefill span")
+    if errs:
+        return errs
+    if not admit <= first_tok <= evict:
+        errs.append(
+            f"rid {rid}: admit/first_token/evict out of order "
+            f"({admit:.1f}, {first_tok:.1f}, {evict:.1f})"
+        )
+    for ev in prefills:
+        if not admit <= ev["ts"] <= first_tok:
+            errs.append(
+                f"rid {rid}: prefill span at ts={ev['ts']:.1f} outside "
+                f"[admit={admit:.1f}, first_token={first_tok:.1f}]"
+            )
     return errs
 
 

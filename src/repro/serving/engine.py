@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.models.registry import Model
 from repro.obs import attribution as _obs
+from repro.obs import trace as _obs_trace
 from repro.serving.kvpool import clear_slots
 
 
@@ -310,7 +311,12 @@ class ServeEngine:
         (1, 1[, ncb]), primed batch-1 cache at this engine's max_len) for the
         KV pool to scatter into the assigned slot.
         """
-        with self._mesh_scope(), _obs.collecting(self.prefill_totals):
+        with self._mesh_scope(), _obs.collecting(self.prefill_totals), \
+                _obs_trace.span(
+                    "engine.prefill_request",
+                    cat="engine",
+                    prompt_len=batch["tokens"].shape[1],
+                ):
             logits, cache = self._prefill(self.params, batch)
         return self._sample(logits), cache
 
@@ -357,7 +363,14 @@ class ServeEngine:
         totals = self._chunk_totals.setdefault(
             (length, wrapped), _obs.GemmTotals()
         )
-        with self._mesh_scope(), _obs.collecting(totals):
+        with self._mesh_scope(), _obs.collecting(totals), \
+                _obs_trace.span(
+                    "engine.prefill_chunk",
+                    cat="engine",
+                    offset=offset,
+                    length=length,
+                    wrapped=wrapped,
+                ):
             logits, cache_one = self._chunk(
                 self.params,
                 jnp.asarray(tokens),
@@ -375,6 +388,9 @@ class ServeEngine:
         Returns (sampled tokens (B, 1[, ncb]), new cache).  The cache is
         donated, matching the synchronized path's allocation-free decode.
         """
-        with self._mesh_scope(), _obs.collecting(self.decode_totals):
+        with self._mesh_scope(), _obs.collecting(self.decode_totals), \
+                _obs_trace.span(
+                    "engine.decode_slots", cat="engine", batch=tokens.shape[0]
+                ):
             logits, cache = self._decode(self.params, tokens, cache, pos)
         return self._sample(logits), cache

@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.obs import attribution as _obs_attr
 from repro.obs import metrics as _obs_metrics
+from repro.obs import slo as _obs_slo
 from repro.obs import trace as _obs_trace
 from repro.serving.engine import ServeEngine, chunk_schedule
 from repro.serving.kvpool import KVPool
@@ -82,6 +83,9 @@ class Request:
     first_token_s: float = -1.0  # wall seconds from run start to first token
     admitted_s: float = -1.0  # wall seconds from run start to admission
     last_token_s: float = -1.0  # wall time of the latest token (ITL basis)
+    eligible_s: float = -1.0  # wall time the arrival tick was reached
+    # (queue-wait = admitted_s - eligible_s: time spent waiting for a slot,
+    # not time spent not-yet-arrived)
     # chunked prefill progress: the (offset, length) schedule and how many
     # chunks have landed in the KV slot so far (PREFILLING-with-progress)
     chunks: list = dataclasses.field(default_factory=list)
@@ -152,6 +156,9 @@ class SchedulerStats:
         self._tick_lat = r.histogram("sched.tick_latency_s")
         self._ttft = r.histogram("serve.ttft_s")
         self._itl = r.histogram("serve.itl_s")
+        self._queue_wait = r.histogram("serve.queue_wait_s")
+        self._goodput = r.counter("serve.goodput_toks")
+        self._conformant = r.counter("serve.requests_conformant")
         self._mfu = r.histogram("serve.decode_mfu")
         self._residual = r.histogram("serve.model_residual")
         self._queue_depth = r.gauge("sched.queue_depth")
@@ -167,11 +174,23 @@ class SchedulerStats:
     def count_idle_tick(self) -> None:
         self._idle_ticks.inc()
 
-    def count_admitted(self) -> None:
+    def count_admitted(self, queue_wait_s: float | None = None) -> None:
         self._admitted.inc()
+        if queue_wait_s is not None:
+            self._queue_wait.observe(queue_wait_s)
 
     def count_evicted(self) -> None:
         self._evicted.inc()
+
+    def count_goodput(self, n_tokens: int, conformant: bool) -> None:
+        """One finished request's SLO verdict (goodput = conformant tokens
+        only; vacuously conformant when no SLO is configured)."""
+        if conformant:
+            self._goodput.inc(n_tokens)
+            self._conformant.inc()
+
+    def count_violation(self, kind: str) -> None:
+        self.registry.counter("serve.slo.violations", kind=kind).inc()
 
     def count_token(self, ttft_s: float | None, itl_s: float | None) -> None:
         self._tokens_out.inc()
@@ -258,6 +277,17 @@ class SchedulerStats:
         prefill work sharing the tick)."""
         return self._tick_lat.quantile(0.5), self._tick_lat.quantile(0.99)
 
+    def slo_violations(self) -> int:
+        """Total budget misses across kinds (the labelled counter series)."""
+        snap = self.registry.snapshot()["counters"]
+        return int(
+            sum(
+                v
+                for series, v in snap.items()
+                if series.split("{")[0] == "serve.slo.violations"
+            )
+        )
+
     def summary(self) -> dict:
         p50, p99 = self.latency_percentiles()
         tp50, tp99 = self.tick_percentiles()
@@ -285,6 +315,18 @@ class SchedulerStats:
             "decode_mfu": round(self._mfu.mean(), 6),
             "model_residual": round(self._residual.mean(), 4),
             "kv_bytes_resident": int(self._kv_bytes.value),
+            # SLO accounting (DESIGN.md §12).  Goodput counts only tokens
+            # from requests that finished within every budget; with no SLO
+            # configured every finished request is vacuously conformant, so
+            # goodput_tok_per_s == tok_per_s for fully drained runs.
+            "goodput_toks": int(self._goodput.value),
+            "goodput_tok_per_s": (
+                round(self._goodput.value / wall, 2) if wall > 0 else 0.0
+            ),
+            "requests_finished": int(self._evicted.value),
+            "requests_conformant": int(self._conformant.value),
+            "slo_violations": self.slo_violations(),
+            "queue_wait_p99_ms": round(self._queue_wait.quantile(0.99) * 1e3, 3),
         }
 
 
@@ -304,6 +346,8 @@ class ContinuousScheduler:
         chunk_budget: int = 1,
         precompile: bool = True,
         quantize_kv: bool = False,
+        slo=None,
+        flight_recorder=None,
     ):
         if policy not in self.POLICIES:
             raise ValueError(f"policy must be one of {self.POLICIES}, got {policy!r}")
@@ -358,6 +402,17 @@ class ContinuousScheduler:
         self._t0 = time.perf_counter()
         self._gang_forming = False
         self._warmed = False
+        # SLO conformance + flight recorder (DESIGN.md §12).  ``slo`` is an
+        # ``obs.SLOSpec``; ``flight_recorder`` an ``obs.FlightRecorder`` --
+        # a public attribute, so launchers that build the recorder from the
+        # scheduler's own registry can attach it after construction.
+        self.slo = slo
+        self._conformance = (
+            _obs_slo.ConformanceTracker(slo)
+            if slo is not None and slo.active()
+            else None
+        )
+        self.flight_recorder = flight_recorder
 
     # -- submission ------------------------------------------------------------
 
@@ -377,10 +432,50 @@ class ContinuousScheduler:
 
     # -- internals -------------------------------------------------------------
 
+    def _slo_check(self, req: Request, kind: str, value_s: float) -> None:
+        """Feed one latency sample to the conformance tracker; on a budget
+        miss, count it, mark the trace, and -- on the request's *first*
+        violation -- dump a flight-recorder bundle (one postmortem per
+        offending request, not one per missed token)."""
+        if self._conformance is None:
+            return
+        was_conformant = self._conformance.conformant(req.rid)
+        v = self._conformance.check(req.rid, kind, value_s)
+        if v is None:
+            return
+        self.stats.count_violation(kind)
+        _obs_trace.instant(
+            "slo.violation",
+            cat="slo",
+            rid=req.rid,
+            kind=kind,
+            value_ms=round(value_s * 1e3, 3),
+            budget_ms=round(v.budget_s * 1e3, 3),
+        )
+        if was_conformant and self.flight_recorder is not None:
+            self.flight_recorder.dump(
+                f"slo-{kind}", rid=req.rid, detail=v.to_dict()
+            )
+
     def _finish(self, req: Request) -> None:
         req.state = FINISHED
         req.finished_tick = self.tick
         self.stats.count_evicted()
+        n_tokens = len(req.out)
+        conformant = (
+            self._conformance.on_finish(req.rid, n_tokens)
+            if self._conformance is not None
+            else True  # vacuously conformant: goodput == raw throughput
+        )
+        self.stats.count_goodput(n_tokens, conformant)
+        _obs_trace.instant(
+            "serve.evict",
+            cat="serve",
+            rid=req.rid,
+            tick=self.tick,
+            n_tokens=n_tokens,
+            conformant=conformant,
+        )
         if req.slot >= 0:
             self.pool.free(req.slot)
             del self._slot_req[req.slot]
@@ -400,8 +495,17 @@ class ContinuousScheduler:
             req.first_token_s = now
             if req.admitted_s >= 0:
                 ttft = now - req.admitted_s
+                self._slo_check(req, "ttft", ttft)
+            _obs_trace.instant(
+                "serve.first_token",
+                cat="serve",
+                rid=req.rid,
+                tick=self.tick,
+                ttft_s=round(ttft, 6) if ttft is not None else -1.0,
+            )
         elif req.last_token_s >= 0:
             itl = now - req.last_token_s
+            self._slo_check(req, "itl", itl)
         req.last_token_s = now
         self.stats.count_token(ttft, itl)
         if req.eos_id is not None and tok.ndim == 0 and int(tok) == req.eos_id:
@@ -420,6 +524,13 @@ class ContinuousScheduler:
         return True
 
     def _admit(self) -> None:
+        # Queue-wait starts when the arrival tick is *reached* (the request
+        # became eligible for a slot), not when it was submitted -- waiting
+        # for your own arrival time is not the scheduler's fault.
+        now = time.perf_counter() - self._t0
+        for r in self.queue:
+            if r.eligible_s < 0 and r.arrival <= self.tick:
+                r.eligible_s = now
         self._gang_forming = self.policy == "gang" and self.pool.n_active == 0
         while self._admissible():
             req = self.queue.popleft()
@@ -429,7 +540,22 @@ class ContinuousScheduler:
             req.slot = slot
             req.admitted_tick = self.tick
             req.admitted_s = time.perf_counter() - self._t0
-            self.stats.count_admitted()
+            wait = (
+                max(0.0, req.admitted_s - req.eligible_s)
+                if req.eligible_s >= 0
+                else 0.0
+            )
+            self.stats.count_admitted(wait)
+            _obs_trace.instant(
+                "serve.admit",
+                cat="serve",
+                rid=req.rid,
+                slot=slot,
+                tick=self.tick,
+                queue_wait_s=round(wait, 6),
+                prompt_len=req.prompt_len,
+            )
+            self._slo_check(req, "queue_wait", wait)
             if self.chunked_prefill:
                 # PREFILLING-with-progress: the slot is claimed (pos = -1,
                 # masked out of decode) and the prompt trickles in one
@@ -439,7 +565,7 @@ class ContinuousScheduler:
                 self._prefilling.append(req)
                 continue
             t0 = time.perf_counter()
-            with _obs_trace.span(
+            with _obs_trace.request_scope(req.rid), _obs_trace.span(
                 "serve.prefill", rid=req.rid, prompt_len=req.prompt_len
             ):
                 first, cache_one = self.engine.prefill_request(req.prompt)
@@ -471,7 +597,7 @@ class ContinuousScheduler:
             off, length = req.chunks[req.chunk_idx]
             last = req.chunk_idx == len(req.chunks) - 1
             t0 = time.perf_counter()
-            with _obs_trace.span(
+            with _obs_trace.request_scope(req.rid), _obs_trace.span(
                 "serve.prefill_chunk",
                 rid=req.rid, offset=off, length=length, last=last,
             ):
@@ -523,7 +649,10 @@ class ContinuousScheduler:
             return False
         t0 = time.perf_counter()
         with _obs_trace.span(
-            "serve.decode_tick", tick=self.tick, active=len(active)
+            "serve.decode_tick",
+            tick=self.tick,
+            active=len(active),
+            rids=[self._slot_req[s].rid for s in active],
         ):
             nxt, self.pool.cache = self.engine.decode_slots(
                 jnp.asarray(self._slot_tok), self.pool.cache, self.pool.pos_vector()
@@ -647,11 +776,22 @@ class ContinuousScheduler:
             # the driver steps manually and never called warmup() itself.
             self.warmup()
         t0 = time.perf_counter()
-        self._admit()
-        chunks_before = self.stats.prefill_chunks
-        if self.chunked_prefill:
-            self._prefill_chunk_once()
-        decoded = self._decode_once()
+        try:
+            self._admit()
+            chunks_before = self.stats.prefill_chunks
+            if self.chunked_prefill:
+                self._prefill_chunk_once()
+            decoded = self._decode_once()
+        except Exception as e:
+            # Engine exception: capture the flight recording before the
+            # stack unwinds past the scheduler (the ring buffer still holds
+            # the spans leading up to the failure).
+            if self.flight_recorder is not None:
+                self.flight_recorder.dump(
+                    "exception",
+                    detail={"tick": self.tick, "error": repr(e)},
+                )
+            raise
         dt = time.perf_counter() - t0
         if decoded:
             self.stats.record_tick_latency(dt)

@@ -1,0 +1,212 @@
+"""repro.obs.ledger: the append-only benchmark ledger and its CI compare
+gate (DESIGN.md §12)."""
+
+import json
+
+import pytest
+
+from repro.obs import ledger
+from repro.obs.__main__ import main as obs_main
+
+
+# -- metric direction inference ---------------------------------------------
+
+
+def test_metric_direction_classification():
+    # throughput-ish fragments win even with a time-looking suffix
+    assert ledger.metric_direction("tok_per_s") == 1
+    assert ledger.metric_direction("goodput_tok_per_s") == 1
+    assert ledger.metric_direction("mean_occupancy") == 1
+    assert ledger.metric_direction("plan_hit_rate") == 1
+    assert ledger.metric_direction("requests_conformant") == 1
+    # latency / time / size metrics regress upward
+    assert ledger.metric_direction("p99_step_ms") == -1
+    assert ledger.metric_direction("ttft_p50_ms") == -1
+    assert ledger.metric_direction("prefill_s") == -1
+    assert ledger.metric_direction("best_us") == -1
+    assert ledger.metric_direction("kv_bytes_resident") == -1
+    assert ledger.metric_direction("slo_violations") == -1
+    # unclassifiable -> informational
+    assert ledger.metric_direction("ticks") == 0
+    assert ledger.metric_direction("decode_steps") == 0
+
+
+def test_derive_variant_from_bench_fields():
+    assert ledger.derive_variant({"policy": "continuous", "x": 1}) == "continuous"
+    assert (
+        ledger.derive_variant({"bench": "tune", "problem": "512x512x512"})
+        == "tune/512x512x512"
+    )
+    assert ledger.derive_variant({"tok_per_s": 1.0}) == ""
+
+
+# -- record / entries round-trip --------------------------------------------
+
+
+def test_record_and_entries_round_trip(tmp_path):
+    led = ledger.Ledger(tmp_path / "led.jsonl")
+    e = led.record(
+        "serve", {"tok_per_s": 100.0, "dtype": "float32"},
+        chip="testchip", sha="abc123",
+    )
+    assert e["schema"] == ledger.LEDGER_SCHEMA_VERSION
+    assert e["dtype"] == "float32"  # defaulted from the metrics row
+    entries, bad = led.entries()
+    assert bad == 0 and len(entries) == 1
+    assert entries[0]["metrics"]["tok_per_s"] == 100.0
+    assert ledger.entry_key(entries[0]) == ledger.LedgerKey(
+        "serve", "", "testchip", "float32"
+    )
+    assert len(led) == 1
+    with pytest.raises(ValueError, match="non-empty"):
+        led.record("", {})
+
+
+def test_corrupted_lines_skipped_not_fatal(tmp_path):
+    path = tmp_path / "led.jsonl"
+    led = ledger.Ledger(path)
+    led.record("serve", {"tok_per_s": 1.0}, chip="c", sha="s")
+    with open(path, "a") as f:
+        f.write("{truncated...\n")                      # invalid JSON
+        f.write(json.dumps({"schema": 999}) + "\n")     # unknown schema
+        f.write(json.dumps(["not", "a", "dict"]) + "\n")
+        f.write("\n")                                    # blank: ignored
+    led.record("serve", {"tok_per_s": 2.0}, chip="c", sha="s")
+    entries, bad = led.entries()
+    assert len(entries) == 2 and bad == 3
+    assert [e["metrics"]["tok_per_s"] for e in entries] == [1.0, 2.0]
+
+
+def test_missing_file_is_empty(tmp_path):
+    entries, bad = ledger.Ledger(tmp_path / "nope.jsonl").entries()
+    assert entries == [] and bad == 0
+
+
+# -- compare -----------------------------------------------------------------
+
+
+def _entry(sha, **metrics):
+    return {
+        "schema": 1, "git_sha": sha, "bench": "serve", "variant": "v",
+        "chip": "c", "dtype": "f32", "metrics": metrics,
+    }
+
+
+def test_compare_entries_directions_and_threshold():
+    base = _entry("a", tok_per_s=100.0, p99_step_ms=10.0, ticks=50)
+    # within threshold both ways: ok
+    res = ledger.compare_entries(
+        _entry("b", tok_per_s=97.0, p99_step_ms=10.3, ticks=70), base,
+        threshold=0.05,
+    )
+    assert res.ok and len(res.deltas) == 3
+    # throughput drop past threshold regresses; latency rise regresses;
+    # direction-0 metrics never regress however far they move
+    res = ledger.compare_entries(
+        _entry("b", tok_per_s=80.0, p99_step_ms=20.0, ticks=9999), base,
+        threshold=0.05,
+    )
+    assert not res.ok
+    assert sorted(d.name for d in res.regressions) == [
+        "p99_step_ms", "tok_per_s"
+    ]
+    # improvements are never regressions
+    res = ledger.compare_entries(
+        _entry("b", tok_per_s=200.0, p99_step_ms=1.0, ticks=50), base
+    )
+    assert res.ok
+
+
+def test_compare_entries_skips_unjudgeable_metrics():
+    base = _entry("a", tok_per_s=0.0, mode="serve", ok=True, p99_step_ms=1.0)
+    cur = _entry("b", tok_per_s=50.0, mode="x", ok=False, p99_step_ms=1.0)
+    res = ledger.compare_entries(cur, base)
+    # zero baseline, string, and bool all skipped
+    assert [d.name for d in res.deltas] == ["p99_step_ms"]
+    with pytest.raises(ValueError, match=">= 0"):
+        ledger.compare_entries(cur, base, threshold=-1)
+
+
+def test_compare_skip_regex_excludes_noisy_metrics(tmp_path):
+    # The CI gate skips wall-clock tail metrics: a catastrophic p99 move is
+    # excluded, but the tok_per_s collapse must still trip the gate.
+    base = _entry("a", tok_per_s=100.0, p99_step_ms=1.0, decode_mfu=0.5)
+    cur = _entry("b", tok_per_s=1.0, p99_step_ms=999.0, decode_mfu=0.01)
+    res = ledger.compare_entries(cur, base, skip=r"(_ms|_mfu)$")
+    assert [d.name for d in res.deltas] == ["tok_per_s"]
+    assert not res.ok
+    # skip threads through compare_latest too
+    led = ledger.Ledger(tmp_path / "led.jsonl")
+    led.record("serve", {"policy": "gang", "p99_step_ms": 1.0}, chip="c", sha="a")
+    led.record("serve", {"policy": "gang", "p99_step_ms": 99.0}, chip="c", sha="b")
+    assert not ledger.compare_latest(led)[0].ok
+    results = ledger.compare_latest(led, skip=r"_ms$")
+    assert results[0].ok and not results[0].deltas
+
+
+def test_compare_latest_needs_two_entries_per_key(tmp_path):
+    led = ledger.Ledger(tmp_path / "led.jsonl")
+    led.record("serve", {"policy": "gang", "tok_per_s": 50.0}, chip="c", sha="a")
+    assert ledger.compare_latest(led) == []  # one entry: vacuous pass
+    led.record("serve", {"policy": "gang", "tok_per_s": 51.0}, chip="c", sha="b")
+    led.record("serve", {"policy": "continuous", "tok_per_s": 99.0},
+               chip="c", sha="b")  # different variant, single entry
+    results = ledger.compare_latest(led)
+    assert len(results) == 1 and results[0].ok
+    assert results[0].key.variant == "gang"
+    # latest-vs-previous, not latest-vs-first
+    led.record("serve", {"policy": "gang", "tok_per_s": 30.0}, chip="c", sha="c")
+    (res,) = ledger.compare_latest(led, bench="serve")
+    assert not res.ok and res.deltas[0].baseline == 51.0
+    assert ledger.compare_latest(led, bench="other") == []
+
+
+def test_record_bench_rows_ingests_bench_lines(tmp_path):
+    led = ledger.Ledger(tmp_path / "led.jsonl")
+    rows = [
+        "header,row,ignored",
+        'BENCH {"bench": "serve", "policy": "gang", "tok_per_s": 10.0}',
+        "BENCH not-json",          # skipped: benchmark already printed it
+        'BENCH ["not", "obj"]',    # skipped: not an object
+        'BENCH {"bench": "serve", "policy": "continuous", "tok_per_s": 20.0}',
+        12345,                     # non-string rows tolerated
+    ]
+    n = ledger.record_bench_rows(led, "serve", rows, chip="c", sha="s")
+    assert n == 2
+    keys = sorted(k.variant for k in led.by_key())
+    assert keys == ["serve/continuous", "serve/gang"]
+
+
+def test_format_compare_report():
+    res = ledger.compare_entries(
+        _entry("currsha", tok_per_s=50.0), _entry("basesha", tok_per_s=100.0)
+    )
+    lines = ledger.format_compare([res])
+    assert any("REGRESSION" in ln for ln in lines)
+    assert any("tok_per_s" in ln for ln in lines)
+    assert ledger.format_compare([]) == [
+        "ledger compare: no keys with a baseline yet (need >= 2 entries)"
+    ]
+
+
+# -- CLI (python -m repro.obs ledger ...) ------------------------------------
+
+
+def test_ledger_cli_round_trip(tmp_path, capsys):
+    path = str(tmp_path / "led.jsonl")
+    rec = ["ledger", "record", "--ledger", path, "--bench", "serve",
+           "--chip", "c", "--dtype", "f32", "--sha", "aaa", "--variant", "v"]
+    assert obs_main(rec + ["--json", '{"tok_per_s": 100.0}']) == 0
+    assert obs_main(rec + ["--json", '{"tok_per_s": 99.0}']) == 0
+    assert obs_main(["ledger", "show", "--ledger", path]) == 0
+    assert "2 entries" in capsys.readouterr().out
+    # identical-ish runs pass
+    assert obs_main(["ledger", "compare", "--ledger", path]) == 0
+    # injected regression fails the gate
+    assert obs_main(rec + ["--json", '{"tok_per_s": 1.0}']) == 0
+    assert obs_main(["ledger", "compare", "--ledger", path]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out
+    # malformed --json is a usage error, not a traceback
+    assert obs_main(rec + ["--json", "{bad"]) == 2
+    assert obs_main(rec + ["--json", "[1]"]) == 2

@@ -137,6 +137,31 @@ def test_prometheus_text_rendering():
     assert "occ 0.5" in text
 
 
+def test_prometheus_escapes_hostile_label_values():
+    """Exposition-format escaping (satellite): backslash, double quote, and
+    newline in label values must round-trip through the text format instead
+    of corrupting it."""
+    hostile = 'pa\\th "quoted"\nline2'
+    r = metrics.Registry()
+    r.inc("c", src=hostile)
+    r.observe("h", 1.0, src=hostile)
+    text = r.to_prometheus()
+    escaped = 'src="pa\\\\th \\"quoted\\"\\nline2"'
+    assert f"c_total{{{escaped}}} 1" in text
+    assert f"h_count{{{escaped}}} 1" in text
+    # no line carries a raw newline mid-series and every line parses as
+    # `name{labels} value` -- the round-trip: unescaping the label value
+    # recovers the original string
+    for line in text.strip().split("\n"):
+        name, _, value = line.rpartition(" ")
+        float(value)  # parseable sample
+    unescaped = (
+        escaped[len('src="'):-1]
+        .replace("\\n", "\n").replace('\\"', '"').replace("\\\\", "\\")
+    )
+    assert unescaped == hostile
+
+
 # -- tracer -----------------------------------------------------------------
 
 
@@ -167,6 +192,45 @@ def test_tracer_ring_buffer_drops_oldest():
     names = [e["name"] for e in t.events()]
     assert names == ["e3", "e4"]
     assert t.export_chrome()["otherData"]["dropped_events"] == 3
+
+
+def test_request_scope_tags_spans_and_instants():
+    t = obs_trace.Tracer()
+    with obs_trace.request_scope(7):
+        with t.span("work"):
+            pass
+        t.instant("mark")
+        t.instant("explicit", rid=9)      # explicit rid wins over the scope
+        t.instant("batched", rids=[1, 2])  # batched tagging wins too
+        with obs_trace.request_scope(8):   # nests: inner request wins
+            t.instant("inner")
+    t.instant("outside")                   # no scope -> no rid
+    by_name = {e["name"]: e for e in t.events()}
+    assert by_name["work"]["args"]["rid"] == 7
+    assert by_name["mark"]["args"]["rid"] == 7
+    assert by_name["explicit"]["args"]["rid"] == 9
+    assert by_name["batched"]["args"]["rids"] == [1, 2]
+    assert "rid" not in by_name["batched"]["args"]
+    assert by_name["inner"]["args"]["rid"] == 8
+    assert "args" not in by_name["outside"]
+    assert obs_trace.current_request() is None
+
+
+def test_request_timeline_filters_and_sorts():
+    events = [
+        {"name": "b", "ph": "i", "ts": 2.0, "args": {"rid": 1}},
+        {"name": "a", "ph": "i", "ts": 1.0, "args": {"rid": 1}},
+        {"name": "tick", "ph": "X", "ts": 3.0, "dur": 1.0,
+         "args": {"rids": [1, 2]}},
+        {"name": "other", "ph": "i", "ts": 0.0, "args": {"rid": 2}},
+        {"name": "untagged", "ph": "i", "ts": 0.5},
+    ]
+    tl = obs_trace.request_timeline(events, 1)
+    assert [e["name"] for e in tl] == ["a", "b", "tick"]
+    assert obs_trace.trace_rids(events) == {1, 2}
+    # validate_request_timeline names what is missing
+    errs = obs_trace.validate_request_timeline(events, 1)
+    assert any("serve.admit" in e for e in errs)
 
 
 def test_instrument_decorator(tmp_path):
@@ -375,6 +439,76 @@ def test_serve_run_populates_telemetry():
     # engine-side totals: the traced decode step recorded real GEMM work
     assert engine.decode_totals.flops > 0
     assert engine.decode_totals.predicted_s > 0
+
+
+def test_serve_trace_reconstructs_every_request_timeline():
+    """Tentpole acceptance: every request's rid-tagged span chain (admit ->
+    prefill -> first_token -> evict, decode ticks attributed via rids)
+    validates, under both monolithic and chunked prefill."""
+    from repro.serving import ContinuousScheduler, requests_from_trace
+
+    model, params, engine, trace = _serve_setup()
+    for chunked in (False, True):
+        obs.get_tracer().clear()
+        sched = ContinuousScheduler(
+            engine, chunked_prefill=chunked, chunk_size=8
+        )
+        sched.run(requests_from_trace(trace))
+        doc = obs.get_tracer().export_chrome()
+        assert obs_trace.trace_rids(doc) == {t["rid"] for t in trace}
+        for t in trace:
+            assert obs_trace.validate_request_timeline(doc, t["rid"]) == []
+        # decode ticks carry per-slot attribution
+        ticks = [e for e in doc["traceEvents"]
+                 if e["name"] == "serve.decode_tick"]
+        assert ticks and all(e["args"]["rids"] for e in ticks)
+        # engine-layer spans inherit the scheduler's request scope (warmup
+        # precompiles run outside any scope, so they stay untagged)
+        tagged = {
+            e["args"]["rid"]
+            for e in doc["traceEvents"]
+            if e["name"].startswith("engine.prefill")
+            and "rid" in e.get("args", {})
+        }
+        assert {t["rid"] for t in trace} <= tagged
+
+
+def test_chunked_prefill_does_not_pollute_itl_histograms():
+    """Satellite: under mixed prefill/decode ticks, TTFT and ITL stay
+    per-request quantities -- a mid-prefill request contributes no ITL
+    samples (its wait lands in TTFT), and the bare decode-step histogram
+    never includes prefill work."""
+    from repro.serving import ContinuousScheduler, requests_from_trace
+
+    model, params, engine, trace = _serve_setup()
+    sched = ContinuousScheduler(engine, chunked_prefill=True, chunk_size=4)
+    sched.run(requests_from_trace(trace))
+    st = sched.stats
+    snap = st.registry.snapshot()["histograms"]
+    n_req = len(trace)
+    total = sum(t["max_new_tokens"] for t in trace)
+    # one TTFT per completed prefill, one ITL per token after the first
+    assert snap["serve.ttft_s"]["count"] == n_req
+    assert snap["serve.itl_s"]["count"] == total - n_req
+    # the step histogram has exactly one sample per decode step, so the
+    # co-scheduled prefill chunks (charged to prefill_s) are not in it
+    assert len(st.step_latency_s) == st.decode_steps
+    assert st.prefill_chunks > 0 and st.prefill_s > 0
+
+
+def test_prune_tick_snapshots_keeps_newest(tmp_path):
+    from repro.launch.serve import _prune_tick_snapshots
+
+    for tick in (10, 20, 30, 40):
+        (tmp_path / f"snapshot-{tick:06d}.json").write_text("{}")
+    (tmp_path / "snapshot.json").write_text("{}")
+    (tmp_path / "trace.json").write_text("{}")
+    _prune_tick_snapshots(str(tmp_path), keep=2)
+    left = sorted(p.name for p in tmp_path.iterdir())
+    assert left == [
+        "snapshot-000030.json", "snapshot-000040.json",
+        "snapshot.json", "trace.json",
+    ]
 
 
 def test_two_schedulers_do_not_share_histograms():
