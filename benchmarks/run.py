@@ -21,6 +21,10 @@ against its previous recording (DESIGN.md §12, CI ``ledger-gate`` job).
   serve_long  long-prompt adversarial trace, monolithic vs chunked prefill:
             p99 decode-tick latency must improve under chunking while
             per-request outputs stay identical; BENCH JSON lines
+  serve_paged  paged KV + prefix reuse vs the reserved-stripe pool on one
+            shared-prefix (system-prompt) trace: prefix-hit TTFT p50 must
+            beat no-reuse, peak live paged bytes must undercut the stripe's
+            reservation, outputs bit-identical across arms; BENCH JSON lines
   tp        tensor-parallel GEMM on a forced 8-device mesh: overlapped
             collective matmul vs gather-then-matmul vs single-device
             (subprocess -- the device-count flag must precede jax init);
@@ -67,6 +71,7 @@ def main() -> None:
         obs_report,
         quant_matmul,
         roofline_report,
+        serve_paged,
         serve_throughput,
         table1_dse,
         table2_scaling,
@@ -83,6 +88,7 @@ def main() -> None:
         "tune": tune_report.run,
         "serve": serve_throughput.run,
         "serve_long": serve_throughput.run_longprompt,
+        "serve_paged": serve_paged.run,
         "tp": tp_matmul.run,
         "quant": quant_matmul.run,
         "obs": obs_report.run,

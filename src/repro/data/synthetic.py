@@ -136,21 +136,35 @@ def make_adversarial_trace(
     long_prompt: int = 96,
     long_gen: int = 4,
     long_arrival: float = 2.0,
+    n_long: int = 1,
+    shared_prefix: int = 0,
     seed: int = 0,
 ) -> list[dict]:
-    """The long-prompt worst case for monolithic prefill.
+    """The long-prompt worst case for monolithic prefill (and, with
+    ``n_long > 1``, for the paged pool's free list).
 
-    ``n_short`` short requests arrive at tick 0 and decode steadily; one
-    request with a ``long_prompt``-token prompt arrives at ``long_arrival``
-    while they are mid-generation.  Under monolithic prefill its admission
-    stalls every decoding slot for a full prompt forward (one tick's latency
-    spikes by the whole prefill); under chunked prefill the prompt trickles
-    in one bounded chunk per tick and decode-tick latency stays flat --
-    the per-request tentpole metric of ``benchmarks/serve_throughput.
-    run_longprompt``.  Same entry layout as ``make_request_trace``.
+    ``n_short`` short requests arrive at tick 0 and decode steadily;
+    ``n_long`` requests with ``long_prompt``-token prompts arrive in a burst
+    at ``long_arrival`` while they are mid-generation.  Under monolithic
+    prefill a long admission stalls every decoding slot for a full prompt
+    forward (one tick's latency spikes by the whole prefill); under chunked
+    prefill the prompt trickles in one bounded chunk per tick and
+    decode-tick latency stays flat -- the per-request tentpole metric of
+    ``benchmarks/serve_throughput.run_longprompt``.
+
+    Against a paged pool sized below ``n_slots * max_len`` worth of pages,
+    the long burst exhausts the free list mid-decode -- the eviction-policy
+    trace (DESIGN.md §13, tests/test_paged.py).  ``shared_prefix`` makes the
+    first that many tokens identical across the long prompts so the burst
+    also exercises prefix reuse under pressure.  Same entry layout as
+    ``make_request_trace``.
     """
     if n_short < 1:
         raise ValueError("n_short must be >= 1")
+    if n_long < 1:
+        raise ValueError("n_long must be >= 1")
+    if shared_prefix > long_prompt:
+        raise ValueError("shared_prefix cannot exceed long_prompt")
     trace = [
         {
             "rid": i,
@@ -160,12 +174,76 @@ def make_adversarial_trace(
         }
         for i in range(n_short)
     ]
-    trace.append(
-        {
-            "rid": n_short,
-            "arrival": float(long_arrival),
-            "prompt": make_prompt(cfg, seq=long_prompt, seed=seed + 101),
-            "max_new_tokens": long_gen,
-        }
+    rng = np.random.default_rng(seed + 100)
+    prefix = rng.integers(
+        0, cfg.vocab_size, _token_shape(cfg, 1, shared_prefix), dtype=np.int32
     )
+    for j in range(n_long):
+        prompt = make_prompt(cfg, seq=long_prompt, seed=seed + 101 + j)
+        if shared_prefix:
+            toks = np.asarray(prompt["tokens"]).copy()
+            toks[:, :shared_prefix] = prefix
+            prompt = dict(prompt, tokens=jnp.asarray(toks))
+        trace.append(
+            {
+                "rid": n_short + j,
+                "arrival": float(long_arrival),
+                "prompt": prompt,
+                "max_new_tokens": long_gen,
+            }
+        )
+    return trace
+
+
+def make_shared_prefix_trace(
+    cfg: ArchConfig,
+    *,
+    n_requests: int,
+    prefix_len: int,
+    suffix_len: int = 4,
+    gen: int = 4,
+    n_groups: int = 1,
+    rate: float = 1.0,
+    seed: int = 0,
+) -> list[dict]:
+    """Requests sharing ``n_groups`` distinct ``prefix_len``-token prompt
+    prefixes (round-robin group assignment) with per-request random
+    suffixes -- the system-prompt workload the prefix cache deduplicates
+    (DESIGN.md §13).  The first request of each group prefills the full
+    prompt and registers its pages; every later request in the group should
+    hit ``prefix_len - (prefix_len % page_size)`` cached tokens and prefill
+    only its suffix.  Same entry layout as ``make_request_trace``.
+    """
+    if n_requests < 1:
+        raise ValueError("n_requests must be >= 1")
+    if prefix_len < 1 or suffix_len < 1:
+        raise ValueError("prefix_len and suffix_len must be >= 1")
+    rng = np.random.default_rng(seed)
+    prefixes = [
+        rng.integers(
+            0, cfg.vocab_size, _token_shape(cfg, 1, prefix_len), dtype=np.int32
+        )
+        for _ in range(max(1, n_groups))
+    ]
+    arrivals = np.cumsum(rng.exponential(1.0 / max(rate, 1e-9), n_requests))
+    trace = []
+    for i in range(n_requests):
+        suffix = rng.integers(
+            0, cfg.vocab_size, _token_shape(cfg, 1, suffix_len), dtype=np.int32
+        )
+        toks = np.concatenate([prefixes[i % max(1, n_groups)], suffix], axis=1)
+        prompt: dict = {"tokens": jnp.asarray(toks)}
+        if cfg.frontend == "vit":
+            prompt["patch_embeds"] = jnp.asarray(
+                rng.standard_normal((1, cfg.n_patches, cfg.vit_dim)),
+                dtype=jnp.dtype(cfg.dtype),
+            )
+        trace.append(
+            {
+                "rid": i,
+                "arrival": float(arrivals[i]),
+                "prompt": prompt,
+                "max_new_tokens": gen,
+            }
+        )
     return trace

@@ -30,6 +30,16 @@ int8 with per-head-per-slot scales::
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
         --continuous --quantize kv8 --requests 16 --slots 4
 
+Paged KV cache (``--paged``, DESIGN.md §13): the continuous pool swaps the
+per-slot ``max_len`` stripe for fixed-size pages behind a per-slot page
+table, so resident KV bytes track tokens actually held; ``--prefix-cache``
+adds the radix prefix cache on top, so requests sharing a prompt prefix map
+the same refcounted pages and skip that part of prefill (watch the
+``prefix_hits`` / ``kv_bytes_live`` summary fields)::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --continuous --paged --page-size 16 --prefix-cache --requests 16
+
 Tensor-parallel decode (either mode): ``--model-parallel N`` runs the engine
 over a (1, N) ("data", "model") mesh -- params TP-sharded by the
 ``distributed.sharding`` rules, caches sharded by GSPMD propagation.  Keep
@@ -182,10 +192,12 @@ def run_continuous(model, params, args) -> None:
         # trip on (--slo-ttft-ms / --slo-itl-ms acceptance demo).
         trace = make_adversarial_trace(
             cfg,
-            n_short=max(1, args.requests - 1),
+            n_short=max(1, args.requests - args.long_requests),
             short_prompt=args.mean_prompt,
             short_gen=args.mean_gen,
             long_prompt=args.prompt_len,
+            n_long=args.long_requests,
+            shared_prefix=args.shared_prefix,
             seed=args.seed,
         )
     else:
@@ -222,6 +234,10 @@ def run_continuous(model, params, args) -> None:
         chunk_size=args.chunk_size,
         chunk_budget=args.chunk_budget,
         quantize_kv=args.quantize == "kv8",
+        paged=args.paged,
+        page_size=args.page_size,
+        n_pages=args.pages,
+        prefix_cache=args.prefix_cache,
         slo=slo,
     )
     if args.metrics_dir:
@@ -261,6 +277,14 @@ def run_continuous(model, params, args) -> None:
         f"tick latency p50 {s['p50_tick_ms']:.2f} ms / p99 {s['p99_tick_ms']:.2f} ms | "
         f"mean slot occupancy {s['mean_occupancy']:.2%}"
     )
+    if sched.paged:
+        print(
+            f"paged kv: {sched.pool.pages_in_use}/{sched.pool.n_pages} pages "
+            f"in use at drain, page size {sched.pool.page_size} | "
+            f"prefix hits {s['prefix_hits']} ({s['prefix_hit_tokens']} tokens "
+            f"of prefill skipped) | preempted {s['preempted']} | "
+            f"kv bytes live {s['kv_bytes_live']}"
+        )
     if slo is not None:
         print(
             f"slo: {s['requests_conformant']}/{s['requests_finished']} requests "
@@ -338,6 +362,50 @@ def main() -> None:
         type=int,
         default=1,
         help="max prefill chunks per scheduler tick",
+    )
+    ap.add_argument(
+        "--paged",
+        action="store_true",
+        help="paged KV cache (DESIGN.md §13): fixed-size pages behind a "
+        "per-slot page table instead of the per-slot max_len stripe "
+        "(continuous mode, attention families only)",
+    )
+    ap.add_argument(
+        "--page-size",
+        type=int,
+        default=16,
+        metavar="ROWS",
+        help="KV rows per page (--paged)",
+    )
+    ap.add_argument(
+        "--pages",
+        type=int,
+        default=None,
+        metavar="N",
+        help="page arena size; default slots * ceil(max_len / page_size) "
+        "(undersize it to exercise prefix reclaim + preemption)",
+    )
+    ap.add_argument(
+        "--prefix-cache",
+        action="store_true",
+        help="radix prefix cache over --paged: requests sharing a prompt "
+        "prefix attach the same refcounted pages and prefill only their "
+        "suffix",
+    )
+    ap.add_argument(
+        "--long-requests",
+        type=int,
+        default=1,
+        metavar="N",
+        help="--adversarial: long prompts arriving in the mid-run burst",
+    )
+    ap.add_argument(
+        "--shared-prefix",
+        type=int,
+        default=0,
+        metavar="TOKENS",
+        help="--adversarial: identical leading tokens across the long "
+        "prompts (exercises --prefix-cache under page pressure)",
     )
     ap.add_argument(
         "--quantize",

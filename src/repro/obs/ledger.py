@@ -79,7 +79,7 @@ def git_sha(cwd: str | None = None) -> str:
 
 # Fields a BENCH JSON may carry that discriminate rows within one benchmark
 # (the serve benchmark emits one row per policy, quant one per mode/dtype).
-_VARIANT_FIELDS = ("bench", "policy", "mode", "problem", "algorithm")
+_VARIANT_FIELDS = ("bench", "policy", "mode", "problem", "algorithm", "arm")
 
 
 def derive_variant(metrics: dict) -> str:

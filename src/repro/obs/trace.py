@@ -276,47 +276,78 @@ def validate_request_timeline(doc_or_events: Any, rid: int) -> list[str]:
     a ``serve.admit`` instant, at least one prefill span (``serve.prefill``
     or ``serve.prefill_chunk``), a ``serve.first_token`` instant, and a
     ``serve.evict`` instant, in that timestamp order, with every prefill
-    span between admission and first token.  Only meaningful while the
-    whole request fits in the tracer ring buffer (a dropped prefix is the
+    span between admission and first token.  A ``serve.preempt`` instant
+    (paged pool under page pressure, DESIGN.md §13) ends an admission
+    episode: the request is re-queued and re-admitted from scratch, so
+    each episode is checked independently and only the final one must run
+    through first token to eviction.  Only meaningful while the whole
+    request fits in the tracer ring buffer (a dropped prefix is the
     ring's documented behaviour, not a scheduler bug).
     """
     tl = request_timeline(doc_or_events, rid)
     errs: list[str] = []
 
-    def first_ts(name: str) -> float | None:
-        for ev in tl:
-            if ev["name"] == name:
-                return ev["ts"]
-        return None
+    # split at preempt instants: each segment is one admission episode,
+    # with the preempt event closing the episode it interrupted
+    episodes: list[list[dict]] = [[]]
+    for ev in tl:
+        episodes[-1].append(ev)
+        if ev["name"] == "serve.preempt":
+            episodes.append([])
+    episodes = [ep for ep in episodes if ep]
 
-    admit = first_ts("serve.admit")
-    first_tok = first_ts("serve.first_token")
-    evict = first_ts("serve.evict")
-    prefills = [
-        ev for ev in tl if ev["name"] in ("serve.prefill", "serve.prefill_chunk")
-    ]
-    for name, ts in (
-        ("serve.admit", admit),
-        ("serve.first_token", first_tok),
-        ("serve.evict", evict),
-    ):
-        if ts is None:
-            errs.append(f"rid {rid}: missing {name}")
-    if not prefills:
-        errs.append(f"rid {rid}: no prefill span")
-    if errs:
-        return errs
-    if not admit <= first_tok <= evict:
-        errs.append(
-            f"rid {rid}: admit/first_token/evict out of order "
-            f"({admit:.1f}, {first_tok:.1f}, {evict:.1f})"
-        )
-    for ev in prefills:
-        if not admit <= ev["ts"] <= first_tok:
+    def check_episode(ep: list[dict], final: bool) -> None:
+        def first_ts(name: str) -> float | None:
+            for ev in ep:
+                if ev["name"] == name:
+                    return ev["ts"]
+            return None
+
+        admit = first_ts("serve.admit")
+        first_tok = first_ts("serve.first_token")
+        evict = first_ts("serve.evict")
+        prefills = [
+            ev
+            for ev in ep
+            if ev["name"] in ("serve.prefill", "serve.prefill_chunk")
+        ]
+        required = [("serve.admit", admit)]
+        if final:
+            required += [
+                ("serve.first_token", first_tok),
+                ("serve.evict", evict),
+            ]
+            if not prefills:
+                errs.append(f"rid {rid}: no prefill span")
+        missing = False
+        for name, ts in required:
+            if ts is None:
+                errs.append(f"rid {rid}: missing {name}")
+                missing = True
+        if missing:
+            return
+        if final and not admit <= first_tok <= evict:
             errs.append(
-                f"rid {rid}: prefill span at ts={ev['ts']:.1f} outside "
-                f"[admit={admit:.1f}, first_token={first_tok:.1f}]"
+                f"rid {rid}: admit/first_token/evict out of order "
+                f"({admit:.1f}, {first_tok:.1f}, {evict:.1f})"
             )
+        hi = first_tok if first_tok is not None else float("inf")
+        for ev in prefills:
+            if not admit <= ev["ts"] <= hi:
+                errs.append(
+                    f"rid {rid}: prefill span at ts={ev['ts']:.1f} outside "
+                    f"[admit={admit:.1f}, first_token={hi:.1f}]"
+                )
+
+    if not episodes:
+        return [
+            f"rid {rid}: missing serve.admit",
+            f"rid {rid}: missing serve.first_token",
+            f"rid {rid}: missing serve.evict",
+            f"rid {rid}: no prefill span",
+        ]
+    for i, ep in enumerate(episodes):
+        check_episode(ep, final=i == len(episodes) - 1)
     return errs
 
 

@@ -9,6 +9,11 @@ from repro.serving.engine import (  # noqa: F401
     decode_gemm_problems,
 )
 from repro.serving.kvpool import KVPool  # noqa: F401
+from repro.serving.paged import (  # noqa: F401
+    PagedKVPool,
+    PageExhausted,
+    PrefixCache,
+)
 from repro.serving.scheduler import (  # noqa: F401
     ContinuousScheduler,
     Request,

@@ -216,6 +216,54 @@ class KVPool:
             leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(resident)
         )
 
+    def bytes_report(self) -> dict:
+        """{"reserved": preallocated bytes (== ``bytes_resident``), "live":
+        bytes actually valid under the pos mask}.
+
+        ``reserved`` is the stripe the pool holds regardless of load --
+        n_slots * max_len worth of state.  ``live`` counts, per slot,
+        ``min(pos, seq_capacity)`` rows of every pos-masked attention leaf
+        (a mid-prefill slot has host ``pos = -1`` and counts 0 until its
+        final chunk lands -- exactly the rows the validity mask exposes) and
+        the full per-slot block of maskless state leaves (SSM/hybrid state
+        is dense once the slot is active).  The reserved/live gap is what
+        the paged pool reclaims (DESIGN.md §13).
+        """
+        resident = self._qcache if self.quantize_kv else self._cache
+        pos = np.maximum(self.positions, 0)
+        active_frac = self.n_active / self.n_slots
+        live = 0.0
+
+        def nbytes(node) -> int:
+            return sum(
+                leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(node)
+            )
+
+        def walk(node) -> None:
+            nonlocal live
+            if (
+                isinstance(node, dict)
+                and "pos" in node
+                and not isinstance(node["pos"], dict)
+            ):
+                cap = node["pos"].shape[2]
+                frac = float(np.sum(np.minimum(pos, cap))) / float(
+                    cap * self.n_slots
+                )
+                live += nbytes(node) * frac
+            elif isinstance(node, dict):
+                for v in node.values():
+                    walk(v)
+            elif isinstance(node, (list, tuple)):
+                for v in node:
+                    walk(v)
+            else:
+                live += nbytes(node) * active_frac
+
+        walk(resident)
+        return {"reserved": self.bytes_resident(), "live": int(round(live))}
+
     def active_slots(self) -> list[int]:
         free = set(self._free)
         return [s for s in range(self.n_slots) if s not in free]

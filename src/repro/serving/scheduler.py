@@ -57,6 +57,7 @@ from repro.obs import slo as _obs_slo
 from repro.obs import trace as _obs_trace
 from repro.serving.engine import ServeEngine, chunk_schedule
 from repro.serving.kvpool import KVPool
+from repro.serving.paged import PagedKVPool, PageExhausted
 
 QUEUED = "queued"
 PREFILLING = "prefilling"
@@ -164,6 +165,13 @@ class SchedulerStats:
         self._queue_depth = r.gauge("sched.queue_depth")
         self._slot_occupancy = r.gauge("sched.slot_occupancy")
         self._kv_bytes = r.gauge("serve.kv_bytes_resident")
+        # paged pool (DESIGN.md §13): prefix-cache hits, preemptions under
+        # page pressure, and the pages-vs-stripe memory story
+        self._prefix_hits = r.counter("serve.prefix_hits")
+        self._prefix_hit_tokens = r.counter("serve.prefix_hit_tokens")
+        self._preempted = r.counter("sched.preempted")
+        self._page_occupancy = r.gauge("sched.page_occupancy")
+        self._kv_bytes_live = r.gauge("serve.kv_bytes_live")
 
     # -- recording (called by the scheduler) ---------------------------------
 
@@ -181,6 +189,14 @@ class SchedulerStats:
 
     def count_evicted(self) -> None:
         self._evicted.inc()
+
+    def count_prefix_hit(self, n_tokens: int) -> None:
+        """One admission mapped ``n_tokens`` of prompt onto cached pages."""
+        self._prefix_hits.inc()
+        self._prefix_hit_tokens.inc(n_tokens)
+
+    def count_preempted(self) -> None:
+        self._preempted.inc()
 
     def count_goodput(self, n_tokens: int, conformant: bool) -> None:
         """One finished request's SLO verdict (goodput = conformant tokens
@@ -218,12 +234,21 @@ class SchedulerStats:
         self._residual.observe(residual)
 
     def set_gauges(
-        self, queue_depth: int, occupancy: float, kv_bytes: int | None = None
+        self,
+        queue_depth: int,
+        occupancy: float,
+        kv_bytes: int | None = None,
+        kv_bytes_live: int | None = None,
+        page_occupancy: float | None = None,
     ) -> None:
         self._queue_depth.set(queue_depth)
         self._slot_occupancy.set(occupancy)
         if kv_bytes is not None:
             self._kv_bytes.set(kv_bytes)
+        if kv_bytes_live is not None:
+            self._kv_bytes_live.set(kv_bytes_live)
+        if page_occupancy is not None:
+            self._page_occupancy.set(page_occupancy)
 
     # -- reads (the pre-registry API, preserved) -----------------------------
 
@@ -315,6 +340,11 @@ class SchedulerStats:
             "decode_mfu": round(self._mfu.mean(), 6),
             "model_residual": round(self._residual.mean(), 4),
             "kv_bytes_resident": int(self._kv_bytes.value),
+            "kv_bytes_live": int(self._kv_bytes_live.value),
+            "prefix_hits": int(self._prefix_hits.value),
+            "prefix_hit_tokens": int(self._prefix_hit_tokens.value),
+            "preempted": int(self._preempted.value),
+            "page_occupancy": round(self._page_occupancy.value, 4),
             # SLO accounting (DESIGN.md §12).  Goodput counts only tokens
             # from requests that finished within every budget; with no SLO
             # configured every finished request is vacuously conformant, so
@@ -346,6 +376,10 @@ class ContinuousScheduler:
         chunk_budget: int = 1,
         precompile: bool = True,
         quantize_kv: bool = False,
+        paged: bool = False,
+        page_size: int = 16,
+        n_pages: int | None = None,
+        prefix_cache: bool = False,
         slo=None,
         flight_recorder=None,
     ):
@@ -374,6 +408,36 @@ class ContinuousScheduler:
                 "unmasked state caches; kv8 disabled for this run"
             )
             quantize_kv = False
+        if paged and engine.cfg.family not in ("dense", "moe", "audio", "vlm"):
+            # SSM/hybrid state leaves have no sequence axis to page (the
+            # whole state is one dense block per slot), so paging covers the
+            # attention families only -- same gating shape as kv8 above.
+            import warnings
+
+            warnings.warn(
+                f"{engine.cfg.name}: family {engine.cfg.family!r} has "
+                "state caches with no sequence axis; paged KV disabled "
+                "for this run"
+            )
+            paged = False
+        if prefix_cache and not paged:
+            import warnings
+
+            warnings.warn(
+                "prefix_cache requires the paged pool; disabled for this run"
+            )
+            prefix_cache = False
+        if prefix_cache and not engine.supports_chunked_prefill:
+            # The hit fast path prefills only the prompt *suffix* via
+            # prefill_chunk, and the vit patch prefix isn't captured by
+            # token-id keys anyway.
+            import warnings
+
+            warnings.warn(
+                f"{engine.cfg.name}: frontend {engine.cfg.frontend!r} cannot "
+                "prefill a prompt suffix; prefix cache disabled for this run"
+            )
+            prefix_cache = False
         self.engine = engine
         self.policy = policy
         self.chunked_prefill = chunked_prefill
@@ -382,13 +446,26 @@ class ContinuousScheduler:
         self.chunk_budget = chunk_budget
         self.precompile = precompile
         self.quantize_kv = quantize_kv
-        self.pool = KVPool(
-            engine.model,
-            engine.scfg.batch,
-            engine.scfg.max_len,
-            dtype,
-            quantize_kv_cache=quantize_kv,
-        )
+        self.paged = paged
+        if paged:
+            self.pool = PagedKVPool(
+                engine.model,
+                engine.scfg.batch,
+                engine.scfg.max_len,
+                dtype,
+                quantize_kv_cache=quantize_kv,
+                page_size=page_size,
+                n_pages=n_pages,
+                prefix_cache=prefix_cache,
+            )
+        else:
+            self.pool = KVPool(
+                engine.model,
+                engine.scfg.batch,
+                engine.scfg.max_len,
+                dtype,
+                quantize_kv_cache=quantize_kv,
+            )
         cfg = engine.cfg
         tok_shape = (self.pool.n_slots, 1)
         if cfg.frontend == "audio_codec":
@@ -402,6 +479,12 @@ class ContinuousScheduler:
         self._t0 = time.perf_counter()
         self._gang_forming = False
         self._warmed = False
+        # Set when a request is preempted under page pressure; blocks
+        # further admissions for the remainder of the tick so an admit that
+        # triggered the preemption can't immediately re-admit its own victim
+        # and ping-pong (the victim re-enters from the queue front next
+        # tick, when the decoding set has had a chance to shrink).
+        self._tick_preempted = False
         # SLO conformance + flight recorder (DESIGN.md §12).  ``slo`` is an
         # ``obs.SLOSpec``; ``flight_recorder`` an ``obs.FlightRecorder`` --
         # a public attribute, so launchers that build the recorder from the
@@ -512,10 +595,96 @@ class ContinuousScheduler:
             return True
         return len(req.out) >= req.max_new_tokens
 
+    # -- page pressure (paged pool only, DESIGN.md §13) ------------------------
+
+    def _prepare_pages(self, slot: int, start: int, end: int) -> None:
+        """``pool.prepare_write`` with the documented page-pressure policy.
+
+        On :class:`PageExhausted`, in order: (1) reclaim idle prefix-cache
+        pages (LRU chains whose pages no live slot maps); (2) preempt the
+        most recently admitted *other* request -- LIFO: it has the least
+        sunk prefill/decode work -- resetting it to the front of the queue
+        (greedy decoding regenerates its tokens identically on re-admission;
+        sampled runs re-draw, same as any eviction); (3) fail loudly when no
+        victim remains, which means the arena cannot hold even the present
+        request (``n_pages`` too small).
+        """
+        while True:
+            try:
+                self.pool.prepare_write(slot, start, end)
+                return
+            except PageExhausted:
+                if self.pool.reclaim_prefix_pages(1):
+                    continue
+                victim = self._preempt_victim(protect=slot)
+                if victim is None:
+                    raise RuntimeError(
+                        f"page arena exhausted: slot {slot} needs rows "
+                        f"[{start}, {end}) and no prefix pages or "
+                        "preemptable requests remain (n_pages too small "
+                        "for a single request)"
+                    ) from None
+                self._preempt(victim)
+
+    def _preempt_victim(self, protect: int) -> Request | None:
+        """Most recently admitted live request other than ``protect``'s --
+        prefilling requests included (their landed chunks hold pages too)."""
+        cands = [r for r in self._prefilling if r.slot != protect]
+        cands += [
+            r
+            for s, r in self._slot_req.items()
+            if s != protect and r.state == DECODING
+        ]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: (r.admitted_tick, r.rid))
+
+    def _preempt(self, req: Request) -> None:
+        """Evict ``req`` back to the queue front and release its pages.
+        Freeing the slot is what returns the pages: exclusive pages blank
+        and rejoin the free list, shared prefix pages just drop a ref."""
+        self.stats.count_preempted()
+        self._tick_preempted = True
+        _obs_trace.instant(
+            "serve.preempt",
+            cat="serve",
+            rid=req.rid,
+            slot=req.slot,
+            tick=self.tick,
+            n_tokens=len(req.out),
+        )
+        try:
+            self._prefilling.remove(req)
+        except ValueError:
+            pass
+        self._slot_req.pop(req.slot, None)
+        self.pool.free(req.slot)
+        req.slot = -1
+        req.state = QUEUED
+        req.out = []
+        req.chunks = []
+        req.chunk_idx = 0
+        req.staging = None
+        req.admitted_tick = -1
+        req.admitted_s = -1.0
+        req.first_token_s = -1.0
+        req.last_token_s = -1.0
+        self.queue.appendleft(req)
+
+    def _prefill_suffix(self, req: Request, hit: int):
+        """Prefix-hit monolithic prefill: the slot is already mapped onto
+        ``hit`` tokens of cached prefix pages, so only the prompt suffix
+        runs through the model (one chunk at absolute offset ``hit``,
+        emitting the last-position logits).  Returns (first token, full
+        batch-1 slot view to scatter back)."""
+        suffix = jnp.asarray(req.prompt["tokens"][:, hit:])
+        view = self.pool.gather_slot(req.slot)
+        return self.engine.prefill_chunk(suffix, view, hit, last=True)
+
     def _admissible(self) -> bool:
         if not self.queue or self.queue[0].arrival > self.tick:
             return False
-        if self.pool.n_free == 0:
+        if self.pool.n_free == 0 or self._tick_preempted:
             return False
         if self.policy == "gang":
             # A gang only forms on an empty pool; once slots are occupied,
@@ -556,29 +725,86 @@ class ContinuousScheduler:
                 prompt_len=req.prompt_len,
             )
             self._slo_check(req, "queue_wait", wait)
+            n_pos = self.engine.prompt_positions(req.prompt)
+            # Prefix-hit fast path (paged + prefix_cache): map the shared
+            # prompt pages into the fresh slot and prefill only the suffix.
+            # Prompts longer than the attention ring are excluded -- their
+            # cache rows wrap, so row != absolute position and page keys
+            # would lie (register_prefix skips them for the same reason).
+            hit = 0
+            if (
+                self.paged
+                and self.pool.prefix is not None
+                and n_pos <= self.pool.seq_len
+            ):
+                hit, pids = self.pool.lookup_prefix(
+                    np.asarray(req.prompt["tokens"][0])
+                )
+                if hit:
+                    self.pool.attach_prefix(slot, pids)
+                    self.stats.count_prefix_hit(hit)
+                    _obs_trace.instant(
+                        "serve.prefix_hit",
+                        cat="serve",
+                        rid=req.rid,
+                        slot=slot,
+                        tick=self.tick,
+                        hit_tokens=hit,
+                        prompt_len=req.prompt_len,
+                    )
             if self.chunked_prefill:
                 # PREFILLING-with-progress: the slot is claimed (pos = -1,
                 # masked out of decode) and the prompt trickles in one
-                # bucketed chunk per tick via _prefill_chunk_once.
-                req.chunks = chunk_schedule(req.prompt_len, self.chunk_size)
+                # bucketed chunk per tick via _prefill_chunk_once.  On a
+                # prefix hit only the suffix is scheduled, each chunk
+                # shifted to its absolute offset past the cached pages.
+                req.chunks = [
+                    (hit + off, length)
+                    for off, length in chunk_schedule(
+                        req.prompt_len - hit, self.chunk_size
+                    )
+                ]
                 req.chunk_idx = 0
                 self._prefilling.append(req)
                 continue
             t0 = time.perf_counter()
             with _obs_trace.request_scope(req.rid), _obs_trace.span(
-                "serve.prefill", rid=req.rid, prompt_len=req.prompt_len
+                "serve.prefill",
+                rid=req.rid,
+                prompt_len=req.prompt_len,
+                prefix_hit=hit,
             ):
-                first, cache_one = self.engine.prefill_request(req.prompt)
+                if hit:
+                    first, cache_one = self._prefill_suffix(req, hit)
+                else:
+                    first, cache_one = self.engine.prefill_request(req.prompt)
                 first = jax.block_until_ready(first)
-                self.pool.write_prefill(
-                    slot, cache_one, self.engine.prompt_positions(req.prompt)
-                )
+                if self.paged:
+                    # hit tokens are already resident in shared pages; the
+                    # scatter re-writes them with identical bytes (the
+                    # gathered view), so only the suffix needs fresh pages.
+                    self._prepare_pages(
+                        slot, hit, min(n_pos, self.pool.seq_len)
+                    )
+                    self.pool.write_slot(slot, cache_one, next_pos=n_pos)
+                else:
+                    self.pool.write_prefill(slot, cache_one, n_pos)
             self.stats.add_prefill(time.perf_counter() - t0)
             tok = np.asarray(first)[0]  # (1,) or (1, ncb)
             self._start_decoding(req, tok)
 
     def _start_decoding(self, req: Request, tok: np.ndarray) -> None:
         """Prefill complete: seed the slot's token and flip to DECODING."""
+        if self.paged and self.pool.prefix is not None:
+            # Index the finished prompt's full pages so later requests
+            # sharing the prefix skip their prefill (register_prefix itself
+            # skips ring-wrapped prompts, whose rows aren't at their
+            # absolute positions).
+            self.pool.register_prefix(
+                req.slot,
+                np.asarray(req.prompt["tokens"][0]),
+                self.engine.prompt_positions(req.prompt),
+            )
         self._slot_tok[req.slot] = tok
         self._slot_req[req.slot] = req
         req.state = DECODING
@@ -630,6 +856,17 @@ class ContinuousScheduler:
                     next_pos = (
                         self.engine.prompt_positions(req.prompt) if last else None
                     )
+                    if self.paged:
+                        # Map pages for the rows this chunk wrote: [off,
+                        # off+len), or the whole ring when the chunk wrapped
+                        # (its writes land mod seq_len, and the wrap
+                        # overwriting a shared prefix page is exactly the
+                        # copy-on-write trigger).
+                        end = off + length
+                        if end > self.pool.seq_len:
+                            self._prepare_pages(req.slot, 0, self.pool.seq_len)
+                        else:
+                            self._prepare_pages(req.slot, off, end)
                     self.pool.write_slot(req.slot, cache_one, next_pos)
                     req.staging = None if last else cache_one
             self.stats.add_prefill(time.perf_counter() - t0, chunk=True)
@@ -644,6 +881,17 @@ class ContinuousScheduler:
         """One vector-pos decode step; False when no slot was decoding
         (idle accounting lives in ``step``, which knows whether the tick
         did prefill-chunk work instead)."""
+        if self.paged:
+            # Map (and COW, for SWA wraps into shared pages) the one row
+            # each decoding slot writes this step.  Preparing can itself
+            # preempt under page pressure, so re-check liveness per slot and
+            # compute the active set only after every surviving slot is
+            # mapped.
+            for slot in sorted(self._slot_req):
+                if slot not in self._slot_req:
+                    continue
+                idx = self.pool.decode_write_index(slot)
+                self._prepare_pages(slot, idx, idx + 1)
         active = sorted(self._slot_req)
         if not active:
             return False
@@ -707,12 +955,27 @@ class ContinuousScheduler:
         self._warmed = True
         with _obs_trace.span("serve.warmup"):
             self._warmup_impl()
+        self._set_gauges()
+
+    def _set_gauges(self) -> None:
+        # Both pools report {"reserved", "live"}: reserved is allocated-page
+        # bytes (paged -- scales with load) or the preallocated stripe
+        # (unpaged -- constant); live is written-row bytes under the masks.
+        rep = self.pool.bytes_report()
         self.stats.set_gauges(
-            len(self.queue), self.pool.occupancy(), self.pool.bytes_resident()
+            len(self.queue),
+            self.pool.occupancy(),
+            kv_bytes=rep["reserved"],
+            kv_bytes_live=rep["live"],
+            page_occupancy=(
+                self.pool.page_occupancy() if self.paged else None
+            ),
         )
 
     def _warmup_impl(self) -> None:
         key_before = self.engine._key  # warmup must not advance sampling
+        if self.paged:
+            self.pool.warmup()  # absorb the COW/blank page-copy compile
         tok = jnp.asarray(np.zeros_like(self._slot_tok))
         pos = jnp.full((self.pool.n_slots,), -1, jnp.int32)
         out, self.pool.cache = self.engine.decode_slots(tok, self.pool.cache, pos)
@@ -776,6 +1039,7 @@ class ContinuousScheduler:
             # the driver steps manually and never called warmup() itself.
             self.warmup()
         t0 = time.perf_counter()
+        self._tick_preempted = False
         try:
             self._admit()
             chunks_before = self.stats.prefill_chunks
@@ -800,7 +1064,7 @@ class ContinuousScheduler:
             self.stats.count_idle_tick()
         self.tick += 1
         self.stats.count_tick(dt)
-        self.stats.set_gauges(len(self.queue), self.pool.occupancy())
+        self._set_gauges()
         return self.pending()
 
     def run(

@@ -4,6 +4,17 @@ the real single device; only launch/dryrun.py (a fresh process) forces 512."""
 import jax
 import pytest
 
+try:
+    from hypothesis import settings
+
+    # Deterministic profile so the property suites (test_property.py,
+    # test_paged_property.py) replay the same examples in CI -- a failure
+    # is a regression, never a lucky draw.
+    settings.register_profile("repro-ci", derandomize=True, deadline=None)
+    settings.load_profile("repro-ci")
+except ImportError:  # hypothesis is a dev extra; the suites importorskip it
+    pass
+
 
 @pytest.fixture(scope="session")
 def key():

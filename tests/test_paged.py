@@ -1,0 +1,411 @@
+"""Paged KV pool (DESIGN.md §13): page-table units, copy-on-write
+isolation, refcount accounting, a deterministic seeded fuzz against a host
+shadow oracle, the bytes reserved/live regression, and eviction under page
+exhaustion asserted through per-request obs timelines.
+
+The unit/fuzz layer drives the pool through a stub model (a {k, v, pos}
+block cache with a tiny head dim) so page mechanics are exercised without
+transformer forwards; the scheduler-level tests use the real smoke models.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.data.synthetic import make_adversarial_trace
+from repro.models.registry import get_model
+from repro.serving import (
+    ContinuousScheduler,
+    KVPool,
+    PagedKVPool,
+    PageExhausted,
+    ServeConfig,
+    ServeEngine,
+    requests_from_trace,
+)
+
+PAGE = 8
+SEQ = 32
+
+
+class _StubModel:
+    """Minimal carrier of the ``init_cache`` contract the pools consume."""
+
+    class _Cfg:
+        dtype = "float32"
+
+    cfg = _Cfg()
+
+    def init_cache(self, batch, max_len, dtype):
+        return {
+            "layers": {
+                "k": jnp.zeros((2, batch, max_len, 4), dtype),
+                "v": jnp.zeros((2, batch, max_len, 4), dtype),
+                "pos": jnp.full((2, batch, max_len), -1, jnp.int32),
+            }
+        }
+
+
+def _pool(n_slots=3, n_pages=None, prefix=True, page=PAGE, seq=SEQ):
+    return PagedKVPool(
+        _StubModel(),
+        n_slots,
+        seq,
+        page_size=page,
+        n_pages=n_pages,
+        prefix_cache=prefix,
+    )
+
+
+def _write_rows(pool, slot, start, end, values, next_pos=None):
+    """Write rows [start, end) through the public surface: prepare pages,
+    stamp the gathered view (k/v rows carry ``values``, pos rows their
+    absolute positions), scatter back."""
+    pool.prepare_write(slot, start, end)
+    view = pool.gather_slot(slot)
+    k = np.asarray(view["layers"]["k"]).copy()
+    v = np.asarray(view["layers"]["v"]).copy()
+    pos = np.asarray(view["layers"]["pos"]).copy()
+    vals = np.asarray(values, np.float32).reshape(1, end - start, 1)
+    k[:, 0, start:end] = vals
+    v[:, 0, start:end] = vals + 0.5
+    pos[:, 0, start:end] = np.arange(start, end)
+    pool.write_slot(
+        slot,
+        {
+            "layers": {
+                "k": jnp.asarray(k),
+                "v": jnp.asarray(v),
+                "pos": jnp.asarray(pos),
+            }
+        },
+        next_pos=end if next_pos is None else next_pos,
+    )
+
+
+def _rows(pool, slot):
+    """(k_row_value, pos) per row of the slot's gathered view (layer 0)."""
+    view = pool.gather_slot(slot)
+    return (
+        np.asarray(view["layers"]["k"])[0, 0, :, 0],
+        np.asarray(view["layers"]["pos"])[0, 0, :],
+    )
+
+
+# -- page-table mechanics ----------------------------------------------------
+
+
+def test_arena_shape_and_null_gather():
+    pool = _pool()
+    assert pool.pages_per_slot == SEQ // PAGE
+    k = pool.phys["layers"]["k"]
+    assert k.shape == (2, pool.n_pages + 1, PAGE, 4)
+    # an unmapped slot gathers pure null content
+    kv, pos = _rows(pool, 0)
+    assert (kv == 0).all() and (pos == -1).all()
+    assert pool.validate() == []
+
+
+def test_write_gather_no_cross_talk():
+    pool = _pool()
+    a, b = pool.alloc(), pool.alloc()
+    _write_rows(pool, a, 0, 10, np.full(10, 7.0))
+    _write_rows(pool, b, 0, 5, np.full(5, 9.0))
+    ka, pa = _rows(pool, a)
+    kb, pb = _rows(pool, b)
+    assert (ka[:10] == 7.0).all() and (pa[:10] == np.arange(10)).all()
+    assert (kb[:5] == 9.0).all() and (pb[5:] == -1).all()
+    assert pool.pages_in_use == 2 + 1  # ceil(10/8) + ceil(5/8)
+    assert pool.validate() == []
+
+
+def test_pages_allocated_on_demand_and_freed():
+    pool = _pool(prefix=False)
+    s = pool.alloc()
+    _write_rows(pool, s, 0, PAGE, np.zeros(PAGE))
+    assert pool.pages_in_use == 1
+    _write_rows(pool, s, PAGE, PAGE + 1, [1.0])  # decode-style append
+    assert pool.pages_in_use == 2
+    pool.free(s)
+    assert pool.pages_in_use == 0 and pool.pages_free == pool.n_pages
+    # freed pages were blanked: reuse (LIFO -> same slot) shows null
+    # content, not stale rows
+    s2 = pool.alloc()
+    assert s2 == s
+    kv, pos = _rows(pool, s2)
+    assert (kv == 0).all() and (pos == -1).all()
+    assert pool.validate() == []
+    pool.free(s2)
+    with pytest.raises(ValueError):
+        pool.free(s2)  # double free of a free slot
+
+
+def test_prefix_attach_shares_and_cow_isolates():
+    pool = _pool()
+    tokens = np.arange(100, 100 + 2 * PAGE)  # two full pages of tokens
+    a = pool.alloc()
+    _write_rows(pool, a, 0, 2 * PAGE, tokens.astype(np.float32))
+    assert pool.register_prefix(a, tokens, 2 * PAGE) == 2  # both full pages
+    # lookup is capped one page short of the prompt: at least one token must
+    # go through a real forward pass for the last-position logits
+    hit, pids = pool.lookup_prefix(tokens)
+    assert hit == PAGE and len(pids) == 1
+    b = pool.alloc()
+    pool.attach_prefix(b, pids)
+    kb, pb = _rows(pool, b)
+    assert (kb[:PAGE] == tokens[:PAGE]).all()  # shared page visible in b
+    assert pool._ref[pids[0]] == 3  # slot a + slot b + prefix cache
+    assert pool.validate() == []
+    # a write overlapping the shared page copies it first: a is untouched
+    pool.prepare_write(b, PAGE - 2, PAGE + 2)
+    assert pool._ref[pids[0]] == 2  # b now owns a private copy
+    _write_rows(pool, b, PAGE - 2, PAGE + 2, np.full(4, -7.0))
+    ka, _ = _rows(pool, a)
+    assert (ka[: 2 * PAGE] == tokens).all()
+    kb, _ = _rows(pool, b)
+    assert (kb[PAGE - 2 : PAGE + 2] == -7.0).all()
+    assert pool.validate() == []
+
+
+def test_free_keeps_prefix_pages_until_reclaim():
+    pool = _pool()
+    tokens = np.arange(2 * PAGE)
+    a = pool.alloc()
+    _write_rows(pool, a, 0, 2 * PAGE, tokens.astype(np.float32))
+    pool.register_prefix(a, tokens, 2 * PAGE)
+    pool.free(a)
+    # both registered pages survive the free on their cache refs
+    assert pool.pages_in_use == 2
+    hit, pids = pool.lookup_prefix(tokens)
+    assert hit == PAGE
+    assert pool.validate() == []
+    # LRU reclaim erodes the chain leaf-first (lookup only refreshed the
+    # root's stamp), so each call frees exactly what it needs
+    assert pool.reclaim_prefix_pages(1) == 1
+    assert pool.pages_in_use == 1
+    assert pool.validate() == []
+    assert pool.reclaim_prefix_pages(1) == 1
+    assert pool.pages_in_use == 0
+    assert pool.lookup_prefix(tokens) == (0, [])
+    assert pool.validate() == []
+
+
+def test_reclaim_skips_pages_mapped_by_live_slots():
+    pool = _pool()
+    tokens = np.arange(2 * PAGE)
+    a = pool.alloc()
+    _write_rows(pool, a, 0, 2 * PAGE, tokens.astype(np.float32))
+    pool.register_prefix(a, tokens, 2 * PAGE)
+    # a still maps the cached page: evicting the entry would free nothing
+    assert pool.reclaim_prefix_pages(4) == 0
+    assert pool.lookup_prefix(tokens)[0] == PAGE
+    assert pool.validate() == []
+
+
+def test_page_exhausted_and_state_unchanged():
+    pool = _pool(n_slots=2, n_pages=SEQ // PAGE, prefix=False)
+    a = pool.alloc()
+    _write_rows(pool, a, 0, SEQ, np.zeros(SEQ))  # consumes every page
+    b = pool.alloc()
+    with pytest.raises(PageExhausted):
+        pool.prepare_write(b, 0, PAGE)
+    assert not np.any(pool._pt[b] >= 0)  # b still unmapped
+    assert pool.validate() == []
+    pool.free(a)
+    pool.prepare_write(b, 0, PAGE)  # now succeeds
+    assert pool.validate() == []
+
+
+def test_paged_disabled_for_state_families():
+    cfg = dataclasses.replace(get_smoke("xlstm-125m"), dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, ServeConfig(max_len=16, batch=2))
+    with pytest.warns(UserWarning) as rec:
+        sched = ContinuousScheduler(eng, paged=True, prefix_cache=True)
+    msgs = " ".join(str(w.message) for w in rec)
+    assert "paged KV disabled" in msgs
+    assert "prefix_cache requires the paged pool" in msgs
+    assert not sched.paged
+    assert isinstance(sched.pool, KVPool)
+
+
+# -- bytes accounting (satellite: reserved vs live) --------------------------
+
+
+def test_unpaged_bytes_report_half_filled_slot():
+    """Regression: ``bytes_resident`` reports the full reserved stripe; the
+    report must also expose the live bytes under the pos mask."""
+    pool = KVPool(_StubModel(), n_slots=2, max_len=SEQ)
+    s = pool.alloc()
+    pool.write_slot(s, pool.gather_slot(s), next_pos=SEQ // 2)
+    rep = pool.bytes_report()
+    # reserved: 2 slots * (k + v: 2*32*4 fp32 each = 1024 B, pos: 2*32 int32)
+    assert rep["reserved"] == pool.bytes_resident() == 2 * (2 * 1024 + 256)
+    # live: one slot holding 16 of 2*32 slot-rows of the stripe -> 1/4
+    assert rep["live"] == rep["reserved"] // 4 == 1152
+    pool.free(s)
+    assert pool.bytes_report()["live"] == 0
+
+
+def test_paged_bytes_report_tracks_pages_not_slots():
+    pool = _pool(n_slots=3, prefix=False)
+    rep0 = pool.bytes_report()
+    assert rep0 == {"reserved": 0, "live": 0}
+    s = pool.alloc()
+    _write_rows(pool, s, 0, PAGE + 2, np.zeros(PAGE + 2))
+    rep = pool.bytes_report()
+    assert rep["reserved"] == 2 * pool.page_bytes()
+    # top page holds 2 of 8 written rows
+    assert rep["live"] == (PAGE + 2) * pool.page_bytes() // PAGE
+    assert rep["live"] < rep["reserved"] < KVPool(
+        _StubModel(), 3, SEQ
+    ).bytes_resident()
+
+
+# -- deterministic fuzz (runs without hypothesis) ----------------------------
+
+
+def test_seeded_fuzz_random_walk_against_shadow():
+    """300 random admit/extend/free/attach/reclaim ops against a host shadow
+    oracle.  After every op the pool's invariants validate; periodically the
+    gathered rows of every live slot must equal the shadow exactly.
+
+    Row contents are a function of the *token* at that position (the
+    deterministic-model property the real prefix reuse rests on), so a
+    prefix attach is indistinguishable from recomputing the rows -- any
+    divergence is page-table corruption.
+    """
+    rng = np.random.default_rng(42)
+    page, seq, vocab = 4, 24, 3
+    pool = PagedKVPool(
+        _StubModel(), 4, seq, page_size=page, n_pages=20, prefix_cache=True
+    )
+    shadow: dict[int, np.ndarray] = {}  # slot -> (n,) token-valued rows
+
+    def admit():
+        slot = pool.alloc()
+        if slot is None:
+            return
+        n = int(rng.integers(2, seq - 4))
+        tokens = rng.integers(0, vocab, n).astype(np.int64)
+        hit, pids = pool.lookup_prefix(tokens)
+        if hit:
+            pool.attach_prefix(slot, pids)
+        try:
+            _write_rows(
+                pool, slot, hit, n, tokens[hit:].astype(np.float32)
+            )
+        except PageExhausted:
+            pool.free(slot)
+            return
+        shadow[slot] = tokens.astype(np.float32)
+        pool.register_prefix(slot, tokens, n)
+
+    def extend():
+        if not shadow:
+            return
+        slot = int(rng.choice(sorted(shadow)))
+        n = len(shadow[slot])
+        if n >= seq:
+            return
+        tok = float(rng.integers(0, vocab))
+        try:
+            _write_rows(pool, slot, n, n + 1, [tok])
+        except PageExhausted:
+            return
+        shadow[slot] = np.append(shadow[slot], np.float32(tok))
+
+    def free():
+        if not shadow:
+            return
+        slot = int(rng.choice(sorted(shadow)))
+        pool.free(slot)
+        del shadow[slot]
+
+    def reclaim():
+        pool.reclaim_prefix_pages(int(rng.integers(1, 4)))
+
+    ops = [admit, admit, extend, extend, extend, free, reclaim]
+    for step in range(300):
+        ops[int(rng.integers(len(ops)))]()
+        errs = pool.validate()
+        assert errs == [], f"step {step}: {errs}"
+        if step % 20 == 0:
+            for slot, want in shadow.items():
+                kv, pos = _rows(pool, slot)
+                n = len(want)
+                np.testing.assert_array_equal(kv[:n], want, err_msg=f"slot {slot}")
+                assert (pos[:n] == np.arange(n)).all()
+                assert (pos[n:] == -1).all()
+    # drain and verify everything returns
+    for slot in list(shadow):
+        pool.free(slot)
+    pool.reclaim_prefix_pages(pool.n_pages)
+    assert pool.pages_in_use == 0 and pool.validate() == []
+
+
+# -- eviction under page exhaustion (scheduler level) ------------------------
+
+
+def test_exhaustion_preempts_without_corrupting_survivors():
+    """Adversarial burst against an undersized arena: the scheduler must
+    preempt by the documented policy (LIFO victim back to the queue front),
+    every request must still complete with the exact tokens of an
+    unconstrained run, and every per-request obs timeline must validate."""
+    from repro import obs
+    from repro.obs import trace as obs_trace
+
+    cfg = dataclasses.replace(get_smoke("internlm2-1.8b"), dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(batch=4, max_len=32)
+    engine = ServeEngine(model, params, scfg)
+
+    def trace():
+        return make_adversarial_trace(
+            cfg,
+            n_short=3,
+            short_prompt=6,
+            short_gen=20,
+            long_prompt=28,
+            long_gen=3,
+            long_arrival=2.0,
+            n_long=2,
+            shared_prefix=8,
+            seed=0,
+        )
+
+    obs.get_tracer().clear()
+    # full stripe would be 4 slots * 4 pages; 10 pages force exhaustion
+    sched = ContinuousScheduler(
+        engine, paged=True, page_size=8, n_pages=10, prefix_cache=True
+    )
+    out = sched.run(requests_from_trace(trace()), max_ticks=3000)
+    assert sched.pool.validate() == []
+    s = sched.stats.summary()
+    assert s["preempted"] > 0
+    doc = obs.get_tracer().export_chrome()
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "serve.preempt" in names
+    for t in trace():
+        assert obs_trace.validate_request_timeline(doc, t["rid"]) == []
+    # survivors and the preempted request all match the unconstrained run
+    ref = ContinuousScheduler(engine, paged=True, page_size=8).run(
+        requests_from_trace(trace()), max_ticks=3000
+    )
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], out[rid])
+
+
+def test_arena_too_small_for_one_request_fails_loudly():
+    cfg = dataclasses.replace(get_smoke("internlm2-1.8b"), dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, ServeConfig(batch=2, max_len=32))
+    with pytest.raises(ValueError, match="cannot hold even one full slot"):
+        ContinuousScheduler(engine, paged=True, page_size=8, n_pages=2)

@@ -1,0 +1,167 @@
+"""Differential fuzz: the paged pool is bit-invisible to serving.
+
+~50 randomized traces across the three attention cache layouts (GQA /
+SWA-ring / MLA-latent), mixed prefill modes (monolithic and chunked),
+shared and unshared prefixes, and the kv8 sidecar arm.  Every trace is
+asserted three ways, per the ISSUE:
+
+  * paged outputs == unpaged outputs, token for token (the stripe pool is
+    the bit-exactness oracle: gather materializes the same logical cache
+    the stripe holds, so greedy decoding cannot diverge);
+  * a sample trace per arch == isolated generation (each request alone
+    through ``generate``), anchoring both pools to the model itself;
+  * pool invariants (``validate()``) hold after every run.
+
+One ServeEngine per arch is shared across all runs in the module -- the
+pools differ, the jitted prefill/decode closures do not, so only the
+first trace per (arch, prefill mode) pays compiles.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.data.synthetic import make_request_trace, make_shared_prefix_trace
+from repro.models.registry import get_model
+from repro.serving import (
+    ContinuousScheduler,
+    ServeConfig,
+    ServeEngine,
+    requests_from_trace,
+)
+
+# GQA, SWA (ring cache), MLA (latent cache) -- same set as test_continuous
+ARCHS = ["internlm2-1.8b", "h2o-danube-3-4b", "minicpm3-4b"]
+MAX_LEN = 24
+
+_CTX: dict = {}
+
+
+def _ctx(arch):
+    """(cfg, batch-2 scheduler engine, batch-1 isolated engine), built once
+    per arch so every trace in the module reuses the same jit caches."""
+    if arch not in _CTX:
+        cfg = dataclasses.replace(get_smoke(arch), dtype="float32")
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _CTX[arch] = (
+            cfg,
+            ServeEngine(model, params, ServeConfig(max_len=MAX_LEN, batch=2)),
+            ServeEngine(model, params, ServeConfig(max_len=MAX_LEN, batch=1)),
+        )
+    return _CTX[arch]
+
+
+def _trace(cfg, seed, n=4):
+    return make_request_trace(
+        cfg,
+        n_requests=n,
+        mean_prompt=8,
+        mean_gen=4,
+        rate=0.7,
+        seed=seed,
+        min_prompt=4,
+        max_prompt=10,
+        max_gen=6,
+    )
+
+
+def _run(engine, trace, **kw):
+    sched = ContinuousScheduler(engine, **kw)
+    out = sched.run(requests_from_trace(trace))
+    if kw.get("paged"):
+        assert sched.pool.validate() == []
+    return out, sched
+
+
+def _assert_same(ref, got):
+    assert set(ref) == set(got)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], got[rid], err_msg=f"rid {rid}")
+
+
+# -- paged vs unpaged, random ragged traces (30) -----------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("seed", range(10))
+def test_paged_matches_unpaged(arch, seed):
+    """Random trace, same engine, both pools: bit-identical outputs.
+    Odd seeds run chunked prefill; seeds 0/5 mod 3 toggle the prefix
+    cache (it must be a no-op on unshared prompts too)."""
+    cfg, eng, _ = _ctx(arch)
+    trace = _trace(cfg, seed=17 + seed)
+    chunked = dict(chunked_prefill=True, chunk_size=4) if seed % 2 else {}
+    ref, _ = _run(eng, trace, **chunked)
+    got, sched = _run(
+        eng, trace, paged=True, page_size=8, prefix_cache=seed % 3 == 0, **chunked
+    )
+    _assert_same(ref, got)
+    # prefix-cache pages outlive their request by design; reclaim drains them
+    sched.pool.reclaim_prefix_pages(sched.pool.n_pages)
+    assert sched.pool.pages_in_use == 0  # every page returned on eviction
+
+
+# -- paged vs isolated generation (3) ----------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_matches_isolated(arch):
+    """Anchor to the model itself: the paged scheduler reproduces each
+    request's solo greedy tokens exactly."""
+    cfg, eng, one = _ctx(arch)
+    trace = _trace(cfg, seed=101)
+    got, _ = _run(eng, trace, paged=True, page_size=8, prefix_cache=True)
+    for t in trace:
+        ref = np.asarray(one.generate(t["prompt"], n_steps=t["max_new_tokens"]))[0]
+        np.testing.assert_array_equal(ref, got[t["rid"]], err_msg=f"rid {t['rid']}")
+
+
+# -- shared-prefix traces: reuse must not change a single token (12) ---------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("seed", range(4))
+def test_shared_prefix_matches_unpaged(arch, seed):
+    """System-prompt workload: prefix hits fire (reused pages, skipped
+    prefill) and the outputs still match the stripe pool bit for bit."""
+    cfg, eng, _ = _ctx(arch)
+    trace = make_shared_prefix_trace(
+        cfg,
+        n_requests=5,
+        prefix_len=10,
+        suffix_len=3,
+        gen=4,
+        n_groups=2,
+        rate=0.8,
+        seed=31 + seed,
+    )
+    chunked = dict(chunked_prefill=True, chunk_size=4) if seed % 2 else {}
+    ref, _ = _run(eng, trace, **chunked)
+    got, sched = _run(
+        eng, trace, paged=True, page_size=8, prefix_cache=True, **chunked
+    )
+    _assert_same(ref, got)
+    # 2 groups of >= 2 requests sharing a 10-token prefix over 8-row pages:
+    # every non-first group member hits its group's first page
+    assert sched.stats.summary()["prefix_hits"] >= 1
+    assert sched.pool.prefix.hits >= 1
+
+
+# -- kv8 arm: quantized paged == quantized unpaged, token-level (5) ----------
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_kv8_paged_matches_kv8_unpaged(seed):
+    """kv8 quantizes per (layer, page) instead of per (layer, slot), so
+    cache *bits* may differ across pools -- emitted tokens must not."""
+    cfg, eng, _ = _ctx("internlm2-1.8b")
+    trace = _trace(cfg, seed=211 + seed)
+    ref, _ = _run(eng, trace, quantize_kv=True)
+    got, _ = _run(
+        eng, trace, quantize_kv=True, paged=True, page_size=8, prefix_cache=True
+    )
+    _assert_same(ref, got)

@@ -1,0 +1,141 @@
+"""Hypothesis stateful properties of the paged KV pool (DESIGN.md §13).
+
+A ``RuleBasedStateMachine`` drives ``PagedKVPool`` through the same op
+surface the scheduler uses -- admit (with prefix lookup/attach), extend,
+free, reclaim -- against a host shadow oracle, and after *every* rule
+asserts the paging invariants the ISSUE pins:
+
+  1. no page is shared by two live slots unless it is a refcounted prefix
+     page (``validate()``'s sharing rule);
+  2. freed pages return to the free list with refcount zero before reuse
+     (``validate()``'s free-list purity + ``_alloc_page``'s assert);
+  3. every live ``(slot, pos >= 0)`` entry is reachable through the page
+     table (shadow equality of the gathered rows).
+
+Row contents are a function of the token at that position (the
+deterministic-model property prefix reuse rests on), so a prefix attach
+is indistinguishable from recomputing the rows -- any divergence is
+page-table corruption, and hypothesis shrinks the op sequence that
+produced it.  Skipped when hypothesis is not installed (dev extra); the
+seeded fuzz in test_paged.py covers the same surface without it.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (dev extra); skipping property tests"
+)
+from hypothesis import settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (  # noqa: E402
+    RuleBasedStateMachine,
+    initialize,
+    invariant,
+    precondition,
+    rule,
+)
+
+from repro.serving import PagedKVPool, PageExhausted  # noqa: E402
+
+from test_paged import _StubModel, _rows, _write_rows  # noqa: E402
+
+PAGE, SEQ, VOCAB, SLOTS, PAGES = 4, 16, 3, 3, 9
+
+tokens_st = st.lists(
+    st.integers(min_value=0, max_value=VOCAB - 1), min_size=2, max_size=SEQ - 2
+)
+
+
+class PagedPoolMachine(RuleBasedStateMachine):
+    @initialize()
+    def setup(self):
+        self.pool = PagedKVPool(
+            _StubModel(),
+            SLOTS,
+            SEQ,
+            page_size=PAGE,
+            n_pages=PAGES,
+            prefix_cache=True,
+        )
+        self.shadow: dict[int, np.ndarray] = {}
+
+    @rule(tokens=tokens_st)
+    def admit(self, tokens):
+        """Admit a prompt: alloc, prefix lookup/attach, write the suffix,
+        register -- the scheduler's ``_admit`` in miniature."""
+        slot = self.pool.alloc()
+        if slot is None:
+            return
+        toks = np.asarray(tokens, np.int64)
+        hit, pids = self.pool.lookup_prefix(toks)
+        if hit:
+            self.pool.attach_prefix(slot, pids)
+        try:
+            _write_rows(
+                self.pool, slot, hit, len(toks), toks[hit:].astype(np.float32)
+            )
+        except PageExhausted:
+            # admission failed cleanly: the slot must come back whole
+            self.pool.free(slot)
+            return
+        self.shadow[slot] = toks.astype(np.float32)
+        self.pool.register_prefix(slot, toks, len(toks))
+
+    @precondition(lambda self: self.shadow)
+    @rule(pick=st.integers(min_value=0, max_value=7), tok=st.integers(0, VOCAB - 1))
+    def extend(self, pick, tok):
+        """Decode one token into a live slot (the per-tick page prep)."""
+        slot = sorted(self.shadow)[pick % len(self.shadow)]
+        n = len(self.shadow[slot])
+        if n >= SEQ:
+            return
+        try:
+            _write_rows(self.pool, slot, n, n + 1, [float(tok)])
+        except PageExhausted:
+            return
+        self.shadow[slot] = np.append(self.shadow[slot], np.float32(tok))
+
+    @precondition(lambda self: self.shadow)
+    @rule(pick=st.integers(min_value=0, max_value=7))
+    def free(self, pick):
+        slot = sorted(self.shadow)[pick % len(self.shadow)]
+        self.pool.free(slot)
+        del self.shadow[slot]
+
+    @rule(n=st.integers(min_value=1, max_value=4))
+    def reclaim(self, n):
+        self.pool.reclaim_prefix_pages(n)
+
+    @invariant()
+    def pool_invariants(self):
+        if not hasattr(self, "pool"):
+            return
+        errs = self.pool.validate()
+        assert errs == [], errs
+
+    @invariant()
+    def shadow_matches(self):
+        if not hasattr(self, "pool"):
+            return
+        for slot, want in self.shadow.items():
+            kv, pos = _rows(self.pool, slot)
+            n = len(want)
+            np.testing.assert_array_equal(kv[:n], want, err_msg=f"slot {slot}")
+            assert (pos[:n] == np.arange(n)).all(), f"slot {slot}: pos prefix"
+            assert (pos[n:] == -1).all(), f"slot {slot}: pos tail not null"
+
+    def teardown(self):
+        if not hasattr(self, "pool"):
+            return
+        # drain: every page must return to the free list with refcount 0
+        for slot in list(self.shadow):
+            self.pool.free(slot)
+        self.pool.reclaim_prefix_pages(self.pool.n_pages)
+        assert self.pool.pages_in_use == 0
+        assert self.pool.validate() == []
+
+
+TestPagedPoolProperties = PagedPoolMachine.TestCase
+TestPagedPoolProperties.settings = settings(
+    max_examples=20, stateful_step_count=40, deadline=None
+)
