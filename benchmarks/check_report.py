@@ -1,0 +1,52 @@
+"""Static-analysis report: repro.check finding counts for the ledger.
+
+Runs both engines over the tree exactly as the CI gate does -- the linter
+over src/ and tests/, the contract auditor over every dispatch path and the
+full paper-config candidate sweep -- and emits one BENCH JSON row so the
+regression ledger tracks finding counts and audit coverage per commit
+(``check_new`` regressing from 0 is the signal; suppressed-baseline debt is
+reported separately so it cannot hide).
+"""
+
+from __future__ import annotations
+
+import json
+
+
+def run() -> list[str]:
+    from repro.check import audit as audit_mod
+    from repro.check import baseline as baseline_mod
+    from repro.check import lint as lint_mod
+
+    lint_findings = lint_mod.lint_paths(["src", "tests"])
+    audit_findings, stats = audit_mod.run_audit(sweep=True, dispatch=True)
+    findings = lint_findings + audit_findings
+    new, suppressed = baseline_mod.partition(findings, baseline_mod.load())
+
+    row = {
+        "check_new": len(new),
+        "check_suppressed": len(suppressed),
+        "lint_findings": len(lint_findings),
+        "audit_findings": len(audit_findings),
+        "plans_audited": stats.get("plans_audited", 0),
+        "plans_traced": stats.get("plans_traced", 0),
+        "dispatch_paths_traced": sum(
+            1 for v in stats.get("paths", {}).values() if isinstance(v, int)
+        ),
+        "clean": not new,
+    }
+    rows = [
+        "check_report.engine,findings",
+        f"lint,{len(lint_findings)}",
+        f"audit,{len(audit_findings)} (over {row['plans_audited']} plans, "
+        f"{row['dispatch_paths_traced']} dispatch paths)",
+        "BENCH " + json.dumps(row, sort_keys=True),
+    ]
+    for f in new[:20]:
+        rows.append(f"FINDING {f.render()}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -36,6 +36,9 @@ against its previous recording (DESIGN.md §12, CI ``ledger-gate`` job).
             vs enabled (overhead budget < 3% tok/s), plus the enabled run's
             MFU / roofline residual / plan hit rate / TTFT / KV bytes and
             structural validation of snapshot + Chrome trace; BENCH JSON
+  check     static analysis: repro.check lint + contract-auditor finding
+            counts and audit coverage (plans verified, dispatch paths
+            traced) so the ledger tracks the tree staying clean; BENCH JSON
 """
 
 from __future__ import annotations
@@ -68,6 +71,7 @@ def _ledger_path(argv: list[str]) -> tuple[str | None, list[str]]:
 
 def main() -> None:
     from benchmarks import (
+        check_report,
         obs_report,
         quant_matmul,
         roofline_report,
@@ -92,6 +96,7 @@ def main() -> None:
         "tp": tp_matmul.run,
         "quant": quant_matmul.run,
         "obs": obs_report.run,
+        "check": check_report.run,
     }
     ledger_path, want = _ledger_path(sys.argv[1:])
     want = want or list(tables)

@@ -1,0 +1,23 @@
+"""repro.check -- static analysis keeping the resource model honest.
+
+Two engines (DESIGN.md §14):
+
+* **Contract auditor** (``repro.check.audit``): abstractly traces every
+  kernel dispatch path and verifies BlockPlan/DSERecord claims -- VMEM
+  working sets under the double-buffering rule, grid/padding divisibility,
+  scale-block alignment, dtype byte widths, HBM traffic vs CostEstimate --
+  against the pallas_call equations jax actually produces.  The analogue of
+  mechanically checking the paper's DSP/M20K resource model against the
+  synthesized design instead of trusting it.
+
+* **Invariant linter** (``repro.check.lint``): stdlib-``ast`` rule pack
+  encoding invariants distilled from this repo's regression history (freed
+  slots must end at pos=-1, spans need request identity, no hardcoded dtype
+  bytes, ...).
+
+CLI: ``python -m repro.check [paths]`` (or the ``repro-check`` console
+script); findings gate CI against the checked-in ``baseline.json`` --
+failures are *new* findings only, same pattern as the benchmark ledger.
+"""
+
+from repro.check.findings import AUDIT, LINT, Finding  # noqa: F401

@@ -256,7 +256,7 @@ def derive_block_plan(
     if in_dtype is not None:
         in_dtype_bytes = hw.dtype_bytes(in_dtype)
     elif in_dtype_bytes is None:
-        in_dtype_bytes = 2
+        in_dtype_bytes = hw.dtype_bytes("bfloat16")
     quantum = chip.lane_dim
 
     # Start square and balanced: need harmonic-mean(bm,bn)/2 * 2/bytes >= CB
@@ -315,7 +315,7 @@ def tensor_parallel_balance(
     if in_dtype is not None:
         in_dtype_bytes = hw.dtype_bytes(in_dtype)
     elif in_dtype_bytes is None:
-        in_dtype_bytes = 2
+        in_dtype_bytes = hw.dtype_bytes("bfloat16")
     per_chip_flops = 2 * m * n * k / tp
     ag_bytes = m * k * in_dtype_bytes * (tp - 1) / tp
     t_compute = per_chip_flops / chip.peak_flops(in_dtype)

@@ -112,14 +112,16 @@ def explore(
     the VMEM fitter and the memory column.
     """
     chip = hw.get_chip(chip)
+    bf16_bytes = hw.dtype_bytes("bfloat16")
     if in_dtype is None and in_dtype_bytes is None:
-        in_dtype_bytes = 2
+        in_dtype_bytes = bf16_bytes
     qbk = _quant_block_k(in_dtype, quant_block_k)
     plan_kw = dict(
         in_dtype=in_dtype,
-        in_dtype_bytes=in_dtype_bytes or 2,
+        in_dtype_bytes=in_dtype_bytes or bf16_bytes,
         quant_block_k=qbk,
-        out_dtype_bytes=2 if qbk else None,
+        # Quantized plans emit wide (bf16) outputs from narrow streams.
+        out_dtype_bytes=bf16_bytes if qbk else None,
     )
     records = []
     for tp in tps:

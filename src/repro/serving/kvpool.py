@@ -98,6 +98,31 @@ def dequantize_kv(qcache: Any, dtype: str) -> Any:
     return jax.tree.map(dq, qcache, is_leaf=_is_qleaf)
 
 
+def check_next_pos(next_pos: Any) -> int | None:
+    """Validate a ``write_slot`` position against the validity-mask contract.
+
+    The whole masking rule is ``valid(k) = pos[k] >= 0`` with -1 the one
+    freed/empty sentinel, so any position below -1 (or a NaN/non-integral
+    value smuggled in through a float) would create a slot state no reader
+    is specified for.  Rejecting it here -- before the cache scatter --
+    keeps a bad caller from mutating the pool and *then* failing.  (The
+    matching static rule is repro.check's ``pos-mask-update``.)
+    """
+    if next_pos is None:
+        return None
+    f = float(next_pos)
+    if f != f or f != int(f):  # NaN or non-integral
+        raise ValueError(
+            f"write_slot: next_pos must be an integer, got {next_pos!r}"
+        )
+    p = int(f)
+    if p < -1:
+        raise ValueError(
+            f"write_slot: next_pos must be >= -1 (-1 = empty sentinel), got {p}"
+        )
+    return p
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_slot(pool: Any, one: Any, slot: jax.Array) -> Any:
     """Write a batch-1 cache pytree into slot ``slot`` of the pooled cache."""
@@ -317,6 +342,7 @@ class KVPool:
         shapes = jax.tree.map(lambda a: a.shape[1], cache_one)
         if any(s != 1 for s in jax.tree.leaves(shapes)):
             raise ValueError("write_slot expects a batch-1 cache")
+        next_pos = check_next_pos(next_pos)
         self.cache = _scatter_slot(self.cache, cache_one, jnp.int32(slot))
         if next_pos is not None:
             self.positions[slot] = next_pos

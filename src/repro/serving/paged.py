@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.kvpool import dequantize_kv, quantize_kv
+from repro.serving.kvpool import check_next_pos, dequantize_kv, quantize_kv
 
 
 class PageExhausted(RuntimeError):
@@ -519,6 +519,7 @@ class PagedKVPool:
         shapes = jax.tree.map(lambda a: a.shape[1], cache_one)
         if any(s != 1 for s in jax.tree.leaves(shapes)):
             raise ValueError("write_slot expects a batch-1 cache")
+        next_pos = check_next_pos(next_pos)
         self.phys = _scatter_pages(
             self.phys, cache_one, self._idx(np.asarray([slot]))
         )
@@ -555,10 +556,32 @@ class PagedKVPool:
         (refcount +1 each; the pages stay immutable for this slot until
         ``prepare_write`` copies the one it must write)."""
         assert not np.any(self._pt[slot] >= 0), "attach_prefix on a used slot"
-        for j, pid in enumerate(pids):
+        # Validate the whole chain before touching the table: a NaN or
+        # out-of-range pid rejected mid-loop would leave earlier pages
+        # refcounted against a half-mapped slot.
+        if len(pids) > self.pages_per_slot:
+            raise ValueError(
+                f"attach_prefix: chain of {len(pids)} pages exceeds the "
+                f"{self.pages_per_slot}-page table row"
+            )
+        clean = []
+        for pid in pids:
+            f = float(pid)
+            if f != f or f != int(f):  # NaN or non-integral
+                raise ValueError(
+                    f"attach_prefix: NaN-shaped page id {pid!r} -- page-table "
+                    f"indices must be integral"
+                )
+            p = int(f)
+            if not 0 <= p < self.n_pages:
+                raise ValueError(
+                    f"attach_prefix: page id {p} outside [0, {self.n_pages})"
+                )
+            clean.append(p)
+        for j, pid in enumerate(clean):
             self._pt[slot, j] = pid
             self._ref[pid] += 1
-        self._hw[slot] = len(pids) * self.page_size
+        self._hw[slot] = len(clean) * self.page_size
 
     def register_prefix(self, slot: int, tokens: np.ndarray, n_tokens: int) -> int:
         """Index this slot's full prompt pages in the prefix cache

@@ -104,11 +104,12 @@ def _heuristic_record(
     from repro.kernels.systolic.ops import _clamp_plan
 
     qbk = dse._quant_block_k(dtype, None)
+    bf16_bytes = hw.dtype_bytes("bfloat16")
     plan_kw = dict(
         in_dtype=dtype,
-        in_dtype_bytes=in_dtype_bytes or 2,
+        in_dtype_bytes=in_dtype_bytes or bf16_bytes,
         quant_block_k=qbk,
-        out_dtype_bytes=2 if qbk else None,
+        out_dtype_bytes=bf16_bytes if qbk else None,
     )
     sm, sn = m // tp, n // tp
     bm, bn, bk = _clamp_plan(sm, sn, k, None, chip, in_dtype=dtype)

@@ -1,0 +1,584 @@
+"""repro.check (DESIGN.md §14): the checker checked.
+
+Three layers: (1) per-lint-rule fixture snippets -- one true positive and
+one near-miss false positive each, so a rule that silently widens or
+narrows fails here first; (2) the contract auditor against deliberately
+corrupted BlockPlans/DSERecords (under-declared vmem, straddling bk,
+wrong byte widths) and against every plan ``tune.candidates.generate``
+emits for the paper config; (3) the baseline gate and CLI exit codes, plus
+the satellite runtime contracts in the KV pools that mirror the
+``pos-mask-update`` rule.
+"""
+
+import dataclasses
+import json
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.check import audit, baseline, lint
+from repro.check.__main__ import main as check_main
+from repro.check.findings import Finding
+from repro.core import dse, hw
+from repro.core.blocking import BlockPlan
+from repro.serving import KVPool, PagedKVPool
+from repro.tune import candidates as tune_candidates
+
+
+def _lint(src: str, path: str) -> list:
+    return lint.lint_source(textwrap.dedent(src), path)
+
+
+def _rules(findings) -> set:
+    return {f.rule for f in findings}
+
+
+# -- lint rule: pallas-outside-kernels ---------------------------------------
+
+
+def test_pallas_outside_kernels_flagged():
+    src = """
+    from jax.experimental import pallas as pl
+
+    def run(x):
+        return pl.pallas_call(lambda r, o: None, out_shape=x)(x)
+    """
+    found = _lint(src, "src/repro/serving/fastpath.py")
+    assert _rules(found) == {"pallas-outside-kernels"}
+
+
+def test_pallas_inside_kernels_clean():
+    src = """
+    from jax.experimental import pallas as pl
+
+    def run(x):
+        return pl.pallas_call(lambda r, o: None, out_shape=x)(x)
+    """
+    assert _lint(src, "src/repro/kernels/custom/fastpath.py") == []
+
+
+# -- lint rule: hardcoded-dtype-bytes ----------------------------------------
+
+
+def test_hardcoded_dtype_bytes_flagged():
+    src = """
+    from repro.core.blocking import BlockPlan
+
+    def plan():
+        return BlockPlan(512, 512, 512, 128, 128, 128, in_dtype_bytes=2)
+    """
+    found = _lint(src, "src/repro/tune/sweep.py")
+    assert _rules(found) == {"hardcoded-dtype-bytes"}
+
+
+def test_derived_dtype_bytes_clean():
+    src = """
+    from repro.core import hw
+    from repro.core.blocking import BlockPlan
+
+    def plan():
+        b = hw.dtype_bytes("bfloat16")
+        return BlockPlan(512, 512, 512, 128, 128, 128, in_dtype_bytes=b)
+    """
+    assert _lint(src, "src/repro/tune/sweep.py") == []
+
+
+def test_hw_table_itself_exempt():
+    src = """
+    def table():
+        return dict(dtype_bytes=2)
+    """
+    assert _lint(src, "src/repro/core/hw.py") == []
+
+
+# -- lint rule: pos-mask-update ----------------------------------------------
+
+
+def test_cache_store_without_pos_flagged():
+    src = """
+    class Pool:
+        def overwrite(self, new):
+            self.cache = new
+    """
+    found = _lint(src, "src/repro/serving/mypool.py")
+    assert _rules(found) == {"pos-mask-update"}
+
+
+def test_cache_store_with_positions_clean():
+    src = """
+    class Pool:
+        def overwrite(self, new, slot, n):
+            self.cache = new
+            self.positions[slot] = n
+    """
+    assert _lint(src, "src/repro/serving/mypool.py") == []
+
+
+def test_cache_store_via_preserving_primitive_clean():
+    src = """
+    from repro.serving.kvpool import clear_slots
+
+    class Pool:
+        def reset(self, mask, batch):
+            self.cache = clear_slots(self.cache, mask, batch)
+    """
+    assert _lint(src, "src/repro/serving/mypool.py") == []
+
+
+def test_cache_store_outside_serving_clean():
+    src = """
+    class Memo:
+        def overwrite(self, new):
+            self.cache = new
+    """
+    assert _lint(src, "src/repro/tune/memo.py") == []
+
+
+# -- lint rule: span-scope ---------------------------------------------------
+
+
+def test_unscoped_scheduler_span_flagged():
+    src = """
+    from repro.obs.trace import span
+
+    def tick(self):
+        with span("serve.tick"):
+            pass
+    """
+    found = _lint(src, "src/repro/serving/scheduler.py")
+    assert _rules(found) == {"span-scope"}
+
+
+def test_span_with_rid_clean():
+    src = """
+    from repro.obs.trace import span
+
+    def tick(self, rids):
+        with span("serve.tick", rids=rids):
+            pass
+    """
+    assert _lint(src, "src/repro/serving/scheduler.py") == []
+
+
+def test_span_under_request_scope_clean():
+    src = """
+    from repro.obs.trace import request_scope, span
+
+    def admit(self, req):
+        with request_scope(req.rid):
+            with span("serve.admit"):
+                pass
+    """
+    assert _lint(src, "src/repro/serving/scheduler.py") == []
+
+
+def test_span_outside_scheduler_clean():
+    src = """
+    from repro.obs.trace import span
+
+    def measure():
+        with span("tune.measure"):
+            pass
+    """
+    assert _lint(src, "src/repro/tune/measure.py") == []
+
+
+# -- lint rule: jit-impurity -------------------------------------------------
+
+
+def test_wallclock_under_jit_flagged():
+    src = """
+    import time
+    import jax
+
+    @jax.jit
+    def step(x):
+        t = time.time()
+        return x * t
+    """
+    found = _lint(src, "src/repro/serving/engine.py")
+    assert _rules(found) == {"jit-impurity"}
+
+
+def test_stateful_rng_under_partial_jit_flagged():
+    src = """
+    import functools
+    import random
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def step(x, n):
+        return x + random.random()
+    """
+    found = _lint(src, "src/repro/serving/engine.py")
+    assert _rules(found) == {"jit-impurity"}
+
+
+def test_jax_random_under_jit_clean():
+    src = """
+    import jax
+
+    @jax.jit
+    def step(key, x):
+        key, sub = jax.random.split(key)
+        return x + jax.random.normal(sub, x.shape)
+    """
+    assert _lint(src, "src/repro/serving/engine.py") == []
+
+
+def test_wallclock_outside_jit_clean():
+    src = """
+    import time
+
+    def measure(fn):
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+    """
+    assert _lint(src, "src/repro/tune/measure.py") == []
+
+
+# -- lint rule: ungated-obs-record -------------------------------------------
+
+
+def test_ungated_default_registry_chain_flagged():
+    src = """
+    from repro.obs import metrics
+
+    def on_hit():
+        metrics.get_registry().counter("tune.cache_hits").inc()
+    """
+    found = _lint(src, "src/repro/tune/cache.py")
+    assert _rules(found) == {"ungated-obs-record"}
+
+
+def test_ungated_registry_alias_flagged():
+    src = """
+    from repro.obs import metrics
+
+    def on_hit():
+        reg = metrics.get_registry()
+        reg.counter("tune.cache_hits").inc()
+    """
+    found = _lint(src, "src/repro/tune/cache.py")
+    assert _rules(found) == {"ungated-obs-record"}
+
+
+def test_gated_record_clean():
+    src = """
+    from repro.obs import metrics
+
+    def on_hit():
+        if not metrics.enabled():
+            return
+        metrics.get_registry().counter("tune.cache_hits").inc()
+    """
+    assert _lint(src, "src/repro/tune/cache.py") == []
+
+
+def test_private_registry_clean():
+    src = """
+    def on_hit(self):
+        self.registry.counter("sched.admitted").inc()
+    """
+    assert _lint(src, "src/repro/serving/scheduler_stats.py") == []
+
+
+# -- pragma + fingerprints ---------------------------------------------------
+
+
+def test_pragma_suppresses_rule():
+    src = """
+    from repro.obs.trace import span
+
+    def warmup(self):
+        # repro-check: allow[span-scope] engine-wide warmup
+        with span("serve.warmup"):
+            pass
+    """
+    assert _lint(src, "src/repro/serving/scheduler.py") == []
+
+
+def test_pragma_does_not_suppress_other_rules():
+    src = """
+    from repro.obs.trace import span
+
+    def warmup(self):
+        # repro-check: allow[jit-impurity]
+        with span("serve.warmup"):
+            pass
+    """
+    found = _lint(src, "src/repro/serving/scheduler.py")
+    assert _rules(found) == {"span-scope"}
+
+
+def test_fingerprint_is_line_independent():
+    a = Finding("lint", "r", "p.py", 10, "f", "msg")
+    b = Finding("lint", "r", "p.py", 99, "f", "msg")
+    c = Finding("lint", "r", "p.py", 10, "f", "other msg")
+    assert a.fingerprint == b.fingerprint
+    assert a.fingerprint != c.fingerprint
+
+
+def test_rule_catalog_covers_emitted_rules():
+    # Every fixture-exercised rule id must exist in the documented catalog.
+    for rule in (
+        "pallas-outside-kernels",
+        "hardcoded-dtype-bytes",
+        "pos-mask-update",
+        "span-scope",
+        "jit-impurity",
+        "ungated-obs-record",
+    ):
+        assert rule in lint.RULES
+
+
+# -- contract auditor: corrupted plans ---------------------------------------
+
+
+def test_underdeclared_vmem_caught():
+    plan = BlockPlan(512, 512, 512, 128, 128, 128, in_dtype="bfloat16")
+    found = audit.audit_matmul_plan(
+        plan, dtype="bfloat16", declared_vmem_bytes=plan.vmem_bytes() // 4
+    )
+    assert "vmem-underdeclared" in _rules(found)
+
+
+def test_accurate_vmem_claim_clean():
+    plan = BlockPlan(512, 512, 512, 128, 128, 128, in_dtype="bfloat16")
+    assert audit.audit_matmul_plan(plan, dtype="bfloat16") == []
+
+
+def test_straddling_bk_caught():
+    plan = BlockPlan(
+        512, 512, 512, 128, 128, 256,
+        in_dtype="int8", quant_block_k=128,
+        out_dtype_bytes=hw.dtype_bytes("bfloat16"),
+    )
+    found = audit.audit_matmul_plan(plan, dtype="int8")
+    assert "scale-straddle" in _rules(found)
+    # The dispatcher gcd-clamps, so the traced kernel must NOT run the
+    # straddling geometry -- no geometry-drift on top of the straddle.
+    assert "geometry-drift" not in _rules(found)
+
+
+def test_wrong_dtype_bytes_caught():
+    plan = BlockPlan(
+        512, 512, 512, 128, 128, 128,
+        in_dtype="int8", quant_block_k=128,
+        out_dtype_bytes=hw.dtype_bytes("bfloat16"),
+    )
+    found = audit.audit_matmul_plan(
+        plan, dtype="int8", declared_in_dtype_bytes=2
+    )
+    assert "dtype-bytes-mismatch" in _rules(found)
+
+
+def test_quant_plan_clean_and_sidecars_traced():
+    plan = BlockPlan(
+        512, 512, 512, 128, 128, 128,
+        in_dtype="int8", quant_block_k=128,
+        out_dtype_bytes=hw.dtype_bytes("bfloat16"),
+    )
+    assert audit.audit_matmul_plan(plan, dtype="int8") == []
+
+
+# -- contract auditor: corrupted DSERecords ----------------------------------
+
+
+def _good_record() -> dse.DSERecord:
+    [cand] = tune_candidates.generate(512, 512, 512, dtype="int8", top_k=1)
+    return cand.record
+
+
+def test_record_vmem_drift_caught():
+    bad = dataclasses.replace(_good_record(), vmem_kib=1.0)
+    assert "record-vmem-drift" in _rules(audit.audit_record(bad))
+
+
+def test_record_fits_drift_caught():
+    rec = _good_record()
+    bad = dataclasses.replace(rec, fits=not rec.fits)
+    assert "record-fits-drift" in _rules(audit.audit_record(bad))
+
+
+def test_record_dtype_bytes_drift_caught():
+    # repro-check: allow[hardcoded-dtype-bytes] deliberately corrupted record
+    bad = dataclasses.replace(_good_record(), in_dtype_bytes=2)
+    found = audit.audit_record(bad)
+    assert "record-dtype-bytes" in _rules(found)
+
+
+def test_record_straddle_caught():
+    rec = _good_record()
+    bad = dataclasses.replace(rec, bk=rec.quant_block_k * 2, vmem_kib=0.0)
+    assert "record-scale-straddle" in _rules(audit.audit_record(bad))
+
+
+# -- contract auditor: the paper-config sweep (acceptance criterion) ---------
+
+
+def test_paper_sweep_all_plans_verify():
+    findings, stats = audit.sweep_paper_candidates(trace=True)
+    assert findings == []
+    assert stats["plans_audited"] > 0
+    assert stats["plans_traced"] == stats["plans_audited"]
+    assert set(stats["dtypes"]) == {"bfloat16", "int8", "float8_e4m3fn"}
+
+
+def test_dispatch_paths_all_traced():
+    findings, stats = audit.audit_dispatch_paths()
+    assert findings == []
+    for path in ("systolic", "quant", "grouped", "attention"):
+        assert stats["paths"][path] >= 1, stats
+
+
+def test_traced_vmem_matches_plan_accounting():
+    # The double-buffering rule in TracedKernel.vmem_bytes must agree with
+    # BlockPlan.vmem_bytes exactly on a dividing fp problem -- this is the
+    # equality the whole fitter audit rests on.
+    from repro.kernels.systolic import ops as systolic_ops
+    from repro.obs import metrics
+
+    plan = BlockPlan(512, 512, 512, 128, 128, 128, in_dtype="bfloat16")
+    with metrics.disabled():
+        kernels = audit.trace_kernels(
+            lambda a, b: systolic_ops.matmul(a, b, plan=plan, interpret=True),
+            audit._sds((512, 512), "bfloat16"),
+            audit._sds((512, 512), "bfloat16"),
+        )
+    [kern] = [k for k in kernels if "mmm" in k.name]
+    assert kern.vmem_bytes() == plan.vmem_bytes()
+    assert kern.cost_bytes == plan.hbm_traffic_bytes()
+
+
+# -- baseline gate + CLI -----------------------------------------------------
+
+
+def test_baseline_partition_roundtrip(tmp_path):
+    f1 = Finding("lint", "r1", "a.py", 1, "f", "m1")
+    f2 = Finding("lint", "r2", "b.py", 2, "g", "m2")
+    path = tmp_path / "baseline.json"
+    baseline.write([f1], path)
+    known = baseline.load(path)
+    new, old = baseline.partition([f1, f2], known)
+    assert new == [f2] and old == [f1]
+
+
+def test_cli_clean_tree_exits_zero(tmp_path):
+    clean = tmp_path / "clean.py"
+    clean.write_text("def ok():\n    return 1\n")
+    assert check_main([str(clean), "--no-audit"]) == 0
+
+
+def test_cli_injected_lint_violation_exits_one(tmp_path):
+    bad = tmp_path / "src" / "repro" / "serving" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text(
+        "class P:\n    def overwrite(self, new):\n        self.cache = new\n"
+    )
+    assert check_main([str(bad), "--no-audit"]) == 1
+
+
+def test_cli_injected_corrupt_plan_exits_one(tmp_path):
+    plans = tmp_path / "plans.json"
+    plans.write_text(json.dumps({
+        "plans": [{
+            "m": 512, "n": 512, "k": 512, "bm": 128, "bn": 128, "bk": 128,
+            "dtype": "bfloat16", "declared_vmem_bytes": 1000,
+        }]
+    }))
+    rc = check_main(
+        ["--no-lint", "--no-sweep", "--plans", str(plans), "--json"]
+    )
+    assert rc == 1
+
+
+def test_cli_write_baseline_then_clean(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "serving" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text(
+        "class P:\n    def overwrite(self, new):\n        self.cache = new\n"
+    )
+    base = tmp_path / "baseline.json"
+    assert check_main(
+        [str(bad), "--no-audit", "--baseline", str(base), "--write-baseline"]
+    ) == 0
+    assert check_main([str(bad), "--no-audit", "--baseline", str(base)]) == 0
+    capsys.readouterr()
+
+
+def test_shipped_baseline_is_empty():
+    assert baseline.load() == set()
+
+
+# -- satellite: pool runtime contracts (mirror of pos-mask-update) -----------
+
+
+class _StubModel:
+    class _Cfg:
+        dtype = "float32"
+
+    cfg = _Cfg()
+
+    def init_cache(self, batch, max_len, dtype):
+        return {
+            "layers": {
+                "k": jnp.zeros((2, batch, max_len, 4), dtype),
+                "v": jnp.zeros((2, batch, max_len, 4), dtype),
+                "pos": jnp.full((2, batch, max_len), -1, jnp.int32),
+            }
+        }
+
+
+def _one_cache(max_len=16):
+    return _StubModel().init_cache(1, max_len, "float32")
+
+
+@pytest.mark.parametrize("bad_pos", [-2, -100, float("nan"), 3.5])
+def test_kvpool_write_slot_rejects_bad_pos(bad_pos):
+    pool = KVPool(_StubModel(), n_slots=2, max_len=16)
+    before = np.asarray(pool.cache["layers"]["k"]).copy()
+    with pytest.raises(ValueError):
+        pool.write_slot(0, _one_cache(), next_pos=bad_pos)
+    # contract rejected BEFORE the scatter: pool state untouched
+    np.testing.assert_array_equal(before, np.asarray(pool.cache["layers"]["k"]))
+    assert pool.positions[0] == -1
+
+
+@pytest.mark.parametrize("bad_pos", [-2, float("nan"), 2.5])
+def test_paged_write_slot_rejects_bad_pos(bad_pos):
+    pool = PagedKVPool(_StubModel(), 2, 16, page_size=8)
+    pool.prepare_write(0, 0, 8)
+    with pytest.raises(ValueError):
+        pool.write_slot(0, _one_cache(), next_pos=bad_pos)
+    assert pool.positions[0] == -1
+
+
+def test_write_slot_accepts_sentinel_and_valid_pos():
+    pool = KVPool(_StubModel(), n_slots=2, max_len=16)
+    pool.write_slot(0, _one_cache(), next_pos=-1)
+    assert pool.positions[0] == -1
+    pool.write_slot(0, _one_cache(), next_pos=5)
+    assert pool.positions[0] == 5
+
+
+@pytest.mark.parametrize(
+    "pids", [[float("nan")], [1.5], [-1], [10**9]]
+)
+def test_attach_prefix_rejects_bad_pids(pids):
+    pool = PagedKVPool(_StubModel(), 2, 16, page_size=8, prefix_cache=True)
+    ref_before = pool._ref.copy()
+    with pytest.raises(ValueError):
+        pool.attach_prefix(0, pids)
+    # rejected before any refcount/table mutation
+    np.testing.assert_array_equal(ref_before, pool._ref)
+    assert (pool._pt[0] == -1).all()
+
+
+def test_attach_prefix_rejects_overlong_chain():
+    pool = PagedKVPool(_StubModel(), 2, 16, page_size=8)
+    with pytest.raises(ValueError):
+        pool.attach_prefix(0, [0] * (pool.pages_per_slot + 1))

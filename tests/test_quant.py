@@ -377,7 +377,12 @@ def test_blockplan_in_dtype_overrides_bytes():
 def test_blockplan_counts_scale_bytes():
     base = dict(m=1024, n=1024, k=2048, bm=256, bn=256, bk=256)
     fp = BlockPlan(**base, in_dtype="int8")
-    q = BlockPlan(**base, in_dtype="int8", quant_block_k=128, out_dtype_bytes=2)
+    q = BlockPlan(
+        **base,
+        in_dtype="int8",
+        quant_block_k=128,
+        out_dtype_bytes=hw.dtype_bytes("bfloat16"),
+    )
     # VMEM: one (bm,1) + one (1,bn) fp32 scale stream, double-buffered,
     # plus the wider (bf16) output window vs the 1-byte fp one.
     assert q.vmem_bytes() - fp.vmem_bytes() == (256 + 256) * 4 * 2 + 256 * 256
