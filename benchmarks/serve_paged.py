@@ -14,8 +14,12 @@ comparison is pure pool/scheduler policy:
 
 Reported per arm as a ``BENCH {json}`` line: tok/s, TTFT p50/p99, prefix
 hits, peak reserved and peak live KV bytes (sampled every tick -- the
-end-of-run gauges read ~0 after the pool drains).  Two claims are checked
-and flagged ``OK``/``REGRESSION`` in the trailing comparison rows:
+end-of-run gauges read ~0 after the pool drains), and the *measured* KV
+gather/scatter cost (``kv_gather_us_mean`` / ``kv_scatter_us_mean``,
+sampled ``block_until_ready`` windows at full rate, DESIGN.md §15) -- the
+paged-vs-stripe decode overhead ROADMAP names is a ledger-tracked number,
+not an inference from tok/s.  Two claims are checked and flagged
+``OK``/``REGRESSION`` in the trailing comparison rows:
 
   * prefix-hit TTFT p50 < no-reuse TTFT p50 (skipped prefill is wall time);
   * peak live paged bytes < the stripe pool's reserved bytes.
@@ -32,6 +36,8 @@ import json
 
 import jax
 import numpy as np
+
+from repro import obs
 
 
 def run(
@@ -80,7 +86,7 @@ def run(
         "paged+prefix": dict(paged=True, page_size=page_size, prefix_cache=True),
     }
 
-    def drive(opts):
+    def drive(opts, profile_rate=0.0):
         """Run the trace, sampling peak reserved/live KV bytes every tick."""
         peak = {"reserved": 0, "live": 0}
 
@@ -90,18 +96,44 @@ def run(
                 peak[k] = max(peak[k], rep[k])
 
         sched = ContinuousScheduler(engine, **opts)
-        out = sched.run(requests_from_trace(trace), on_tick=sample)
+        with obs.sampling(profile_rate):
+            out = sched.run(requests_from_trace(trace), on_tick=sample)
         return sched, out, peak
+
+    def kv_sampled() -> dict[str, float]:
+        """Current process-wide kv.* sampled-timing counters."""
+        snap = obs.get_registry().snapshot()
+        return {
+            k: v for k, v in snap["counters"].items() if k.startswith("kv.")
+        }
+
+    def kv_mean_us(before: dict, after: dict, op: str) -> tuple[float, int]:
+        """(mean sampled µs, sampled windows) for gather|scatter, all paths."""
+        n = us = 0.0
+        for series, v in after.items():
+            name, _ = obs.parse_series(series)
+            d = v - before.get(series, 0.0)
+            if name == f"kv.{op}.sampled":
+                n += d
+            elif name == f"kv.{op}.sampled_us":
+                us += d
+        return (us / n if n else 0.0), int(n)
 
     rows = [
         "serve_paged.arm,tok_per_s,ttft_p50_ms,prefix_hits,"
-        "peak_kv_reserved_bytes,peak_kv_live_bytes"
+        "peak_kv_reserved_bytes,peak_kv_live_bytes,kv_gather_mean_us"
     ]
     outputs: dict[str, dict[int, np.ndarray]] = {}
     summaries: dict[str, dict] = {}
     for arm, opts in arms.items():
         drive(opts)  # warmup pass: compiles (incl. the suffix prefill shape)
-        sched, out, peak = drive(opts)
+        kv0 = kv_sampled()
+        # Measured pass profiles every pool dispatch (rate 1.0): the arm's
+        # kv gather/scatter cost is measured, not inferred from tok/s.
+        sched, out, peak = drive(opts, profile_rate=1.0)
+        kv1 = kv_sampled()
+        gather_us, gather_n = kv_mean_us(kv0, kv1, "gather")
+        scatter_us, scatter_n = kv_mean_us(kv0, kv1, "scatter")
         outputs[arm] = out
         s = sched.stats.summary()
         s.update(
@@ -114,11 +146,15 @@ def run(
             page_size=page_size,
             peak_kv_reserved_bytes=peak["reserved"],
             peak_kv_live_bytes=peak["live"],
+            kv_gather_mean_us=round(gather_us, 2),
+            kv_scatter_mean_us=round(scatter_us, 2),
+            kv_gather_sampled=gather_n,
+            kv_scatter_sampled=scatter_n,
         )
         summaries[arm] = s
         rows.append(
             f"{arm},{s['tok_per_s']},{s['ttft_p50_ms']},{s['prefix_hits']},"
-            f"{peak['reserved']},{peak['live']}"
+            f"{peak['reserved']},{peak['live']},{s['kv_gather_mean_us']}"
         )
         rows.append("BENCH " + json.dumps(s, sort_keys=True))
 
@@ -141,5 +177,12 @@ def run(
     rows.append(
         f"kv_bytes_win,paged-live-vs-stripe-reserved,{mem_win:+d},"
         f"{'OK' if mem_win > 0 else 'REGRESSION'},,"
+    )
+    # The price of the memory win, measured: the paged pool's page
+    # gather/scatter runs real compute where the stripe pool hands out a
+    # reference (its samples cover only the prefill slot ops).
+    gather_cost = summaries["paged"]["kv_gather_mean_us"]
+    rows.append(
+        f"kv_gather_mean_us,paged-measured,{gather_cost:+.2f},measured,,"
     )
     return rows

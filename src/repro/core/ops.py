@@ -132,7 +132,26 @@ def matmul(
         # matmul (DESIGN.md §6); anything indivisible falls through.
         y2 = _cm.maybe_tp_matmul(x2, w, out_dtype=out_dtype)
         if y2 is None:
-            y2 = systolic_ops.matmul(x2, w, out_dtype=out_dtype)
+            # Sampled measured timing (DESIGN.md §15): only for concrete
+            # operands -- under jit this call is being traced and a wall
+            # clock would measure tracing, not the kernel.
+            from repro.obs import profile as _obs_profile
+
+            prof = _obs_profile.get_profiler()
+            if prof.active() and not isinstance(x2, jax.core.Tracer):
+                y2, wall = prof.timed(
+                    "profile.gemm",
+                    lambda: systolic_ops.matmul(x2, w, out_dtype=out_dtype),
+                    backend="pallas-systolic",
+                )
+                if wall is not None:
+                    _obs_profile.record_gemm_sample(
+                        x2.shape[0], w.shape[1], k,
+                        backend="pallas-systolic", dtype=x2.dtype,
+                        wall_s=wall, method="eager-wall",
+                    )
+            else:
+                y2 = systolic_ops.matmul(x2, w, out_dtype=out_dtype)
     elif backend == "reference":
         from repro.core.blocking import BlockPlan
         from repro.core.systolic import blocked_matmul

@@ -61,6 +61,20 @@ from repro.obs import trace as _obs_trace
 DIRECTIONS = ("plus", "minus")
 
 
+def _hop_step_model(
+    tp: int, m: int, n: int, k: int, dtype, hop_bytes: int
+) -> tuple[float, float]:
+    """(t_hop, t_step) under the chip model: one ring hop's transfer time
+    and one ring step's shard-GEMM compute time."""
+    from repro.core import hw
+
+    chip = hw.get_chip(None)
+    t_hop = hop_bytes / chip.ici_bw_per_link
+    step_flops = 2.0 * (m // tp) * n * k / tp  # one ring step's shard GEMM
+    t_step = step_flops / chip.peak_flops(str(dtype))
+    return t_hop, t_step
+
+
 def _record_dispatch(
     mode: str, tp: int, m: int, n: int, k: int, dtype, overlap: bool, hop_bytes: int
 ) -> None:
@@ -69,30 +83,67 @@ def _record_dispatch(
     Counts ring traffic and publishes the modelled hop/compute overlap ratio
     (t_hop / t_step under the chip model; < 1.0 means each hop hides under
     its block matmul -- the mesh-level balance condition of DESIGN.md §6).
+    The gauge carries ``kind="modeled"`` so it can never be confused with
+    the sampled ``kind="measured"`` series ``_record_measured`` writes.
     Per-hop "tp.ring_hop" spans are trace-time structural markers (the hops
     themselves run on-device inside shard_map), carrying bytes + modelled
     seconds in args.
     """
     if not _obs_metrics.enabled():
         return
-    from repro.core import hw
-
-    chip = hw.get_chip(None)
     hops = tp - 1 if overlap else 0
     _obs_metrics.inc("collective.calls", mode=mode)
     _obs_metrics.inc("collective.hops", hops, mode=mode)
     _obs_metrics.inc("collective.hop_bytes", hop_bytes * hops, mode=mode)
-    t_hop = hop_bytes / chip.ici_bw_per_link
-    step_flops = 2.0 * (m // tp) * n * k / tp  # one ring step's shard GEMM
-    t_step = step_flops / chip.peak_flops(str(dtype))
+    t_hop, t_step = _hop_step_model(tp, m, n, k, dtype, hop_bytes)
     ratio = t_hop / t_step if t_step > 0 else float("inf")
-    _obs_metrics.set_gauge("collective.overlap_ratio", ratio, mode=mode)
+    _obs_metrics.set_gauge(
+        "collective.overlap_ratio", ratio, mode=mode, kind="modeled"
+    )
     for s in range(hops):
         with _obs_trace.span(
             "tp.ring_hop", cat="trace",
             mode=mode, hop=s, bytes=hop_bytes, modeled_s=t_hop,
         ):
             pass
+
+
+def _record_measured(
+    mode: str,
+    tp: int,
+    m: int,
+    n: int,
+    k: int,
+    dtype,
+    hop_bytes: int,
+    wall_s: float,
+) -> None:
+    """Measured counterpart of the modeled overlap gauge.
+
+    ``wall_s`` is a sampled dispatch-to-retire window around the whole
+    sharded GEMM.  The chip model says the compute floor is ``tp`` ring
+    steps of ``t_step`` each; whatever the wall clock shows beyond that is
+    *exposed* (un-overlapped) communication, so the measured per-hop
+    overlap ratio is ``exposed / hops / t_step`` — directly comparable to
+    the modeled ``t_hop / t_step`` gauge, and like it, < 1.0 means hops
+    (mostly) hid under their block matmuls.
+    """
+    if not _obs_metrics.enabled():
+        return
+    hops = tp - 1
+    if hops <= 0:
+        return
+    _, t_step = _hop_step_model(tp, m, n, k, dtype, hop_bytes)
+    if t_step <= 0:
+        return
+    exposed_per_hop = max(0.0, wall_s - tp * t_step) / hops
+    ratio = exposed_per_hop / t_step
+    _obs_metrics.set_gauge(
+        "collective.overlap_ratio", ratio, mode=mode, kind="measured"
+    )
+    _obs_metrics.observe(
+        "collective.wall_us", wall_s * 1e6, mode=mode, tp=tp
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -263,13 +314,26 @@ def all_gather_matmul(
         block=block,
         interpret=interpret,
     )
-    return shard_map(
+    sharded = shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(axis, None), P(None, axis)),
         out_specs=P(None, axis),
         check_rep=False,  # pallas_call has no replication rule
-    )(a, b)
+    )
+    if overlap and not isinstance(a, jax.core.Tracer):
+        from repro.obs import profile as _obs_profile
+
+        out, wall = _obs_profile.get_profiler().timed(
+            "collective", lambda: sharded(a, b), mode="allgather", tp=tp
+        )
+        if wall is not None:
+            _record_measured(
+                "allgather", tp, m, n, k, a.dtype,
+                (m // tp) * k * a.dtype.itemsize, wall,
+            )
+        return out
+    return sharded(a, b)
 
 
 # ---------------------------------------------------------------------------
@@ -352,13 +416,25 @@ def reduce_scatter_matmul(
         block=block,
         interpret=interpret,
     )
-    return shard_map(
+    sharded = shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(None, axis), P(axis, None)),
         out_specs=P(axis, None),
         check_rep=False,  # pallas_call has no replication rule
-    )(a, b)
+    )
+    if overlap and not isinstance(a, jax.core.Tracer):
+        from repro.obs import profile as _obs_profile
+
+        out, wall = _obs_profile.get_profiler().timed(
+            "collective", lambda: sharded(a, b), mode="reducescatter", tp=tp
+        )
+        if wall is not None:
+            _record_measured(
+                "reducescatter", tp, m, n, k, a.dtype, (m // tp) * n * 4, wall
+            )
+        return out
+    return sharded(a, b)
 
 
 # ---------------------------------------------------------------------------

@@ -266,6 +266,35 @@ def run_continuous(model, params, args) -> None:
 
     results = sched.run(requests_from_trace(trace), on_tick=on_tick)
 
+    from repro.obs import profile as _obs_profile
+
+    if _obs_profile.get_profiler().active():
+        # Drift probe (DESIGN.md §15): re-measure this run's decode GEMM
+        # problems off the serving path, then hold the samples against the
+        # tune cache + analytical model.  Findings land in the registry
+        # (tune.plan.stale{key}) before the final snapshot below, so
+        # ``obs doctor`` sees them; REPRO_LEDGER also records them.
+        from repro.obs import drift as _drift
+        from repro.obs import metrics as _obs_metrics
+
+        probe = _drift.probe_decode_plans(engine)
+        snap = _obs_metrics.get_registry().snapshot()
+        findings = _drift.check_drift(snap)
+        ledger = None
+        ledger_path = os.environ.get("REPRO_LEDGER")
+        if ledger_path:
+            from repro.obs.ledger import Ledger
+
+            ledger = Ledger(ledger_path)
+        n_stale = _drift.record_findings(findings, ledger=ledger)
+        print(
+            f"drift probe: {len(probe)} decode GEMMs re-measured, "
+            f"{n_stale} stale plan(s)"
+        )
+        for f in findings:
+            if f.stale:
+                print(f"  STALE {f.recommendation}")
+
     s = sched.stats.summary()
     mode = f"{args.policy}+chunked" if args.chunked_prefill else args.policy
     print(
@@ -307,6 +336,7 @@ def run_continuous(model, params, args) -> None:
             _dump_metrics(args.metrics_dir, sched.stats.registry, extra=s),
         )
         print("chrome trace:", _dump_trace(args.metrics_dir))
+        print(f"diagnose: python -m repro.obs doctor {args.metrics_dir}")
 
 
 def main() -> None:
@@ -469,7 +499,24 @@ def main() -> None:
         default=None,
         help="queue-wait budget (eligible -> slot granted), milliseconds",
     )
+    ap.add_argument(
+        "--profile-sample-rate",
+        type=float,
+        default=None,
+        metavar="RATE",
+        help="measured profiling (DESIGN.md §15): sample this fraction of "
+        "kernel/collective/KV-pool dispatches with block_until_ready timing "
+        "windows, and run the drift probe at end of run (continuous mode). "
+        "0 disables; default $REPRO_PROFILE_RATE or 0",
+    )
     args = ap.parse_args()
+
+    if args.profile_sample_rate is not None:
+        from repro.obs import profile as _obs_profile
+
+        _obs_profile.configure(args.profile_sample_rate)
+        if args.profile_sample_rate > 0:
+            print(f"profiling: sample rate {args.profile_sample_rate}")
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     model = get_model(cfg)

@@ -16,7 +16,16 @@ The cross-cutting layer every other subsystem reports through:
                         or engine exception (DESIGN.md §12);
   * ``ledger``       -- append-only JSONL benchmark ledger keyed by
                         (git sha, bench, variant, chip, dtype); ``python -m
-                        repro.obs ledger compare`` is the CI regression gate.
+                        repro.obs ledger compare`` is the CI regression gate;
+  * ``profile``      -- sampled *measured* device timing: rate-limited
+                        ``block_until_ready`` windows around kernel,
+                        collective, and KV-pool dispatch (DESIGN.md §15);
+  * ``drift``        -- perf-model drift watchdog: sampled GEMM timings vs
+                        the analytical model and the tune cache's stored
+                        ``measured_us``; flags stale plans into the ledger;
+  * ``doctor``       -- ``python -m repro.obs doctor <metrics-dir>``: ranked
+                        diagnosis of a serve run (time sinks, residuals,
+                        stale plans, SLO-to-phase correlation).
 
 Recording is process-wide switchable: ``REPRO_OBS=0`` (env) or
 ``obs.disabled()`` (scope) turns every record call into one boolean check --
@@ -24,6 +33,24 @@ Recording is process-wide switchable: ``REPRO_OBS=0`` (env) or
 hot path stays under 3%.
 """
 
+from repro.obs.doctor import (  # noqa: F401
+    build_report,
+    render_text,
+    validate_doctor_report,
+)
+from repro.obs.drift import (  # noqa: F401
+    DriftFinding,
+    check_drift,
+    probe_decode_plans,
+    record_findings,
+)
+from repro.obs.profile import (  # noqa: F401
+    Profiler,
+    get_profiler,
+    record_gemm_sample,
+    sample_call,
+    sampling,
+)
 from repro.obs.attribution import (  # noqa: F401
     GemmTotals,
     collecting,
@@ -43,6 +70,7 @@ from repro.obs.metrics import (  # noqa: F401
     get_registry,
     inc,
     observe,
+    parse_series,
     reset,
     set_gauge,
     snapshot_doc,
@@ -78,14 +106,18 @@ from repro.obs.trace import (  # noqa: F401
 __all__ = [
     "ConformanceTracker",
     "Counter",
+    "DriftFinding",
     "FlightRecorder",
     "Gauge",
     "GemmTotals",
     "Histogram",
     "Ledger",
+    "Profiler",
     "Registry",
     "SLOSpec",
     "Tracer",
+    "build_report",
+    "check_drift",
     "collecting",
     "compare_entries",
     "compare_latest",
@@ -93,6 +125,7 @@ __all__ = [
     "disabled",
     "enable",
     "enabled",
+    "get_profiler",
     "get_registry",
     "get_tracer",
     "inc",
@@ -101,18 +134,26 @@ __all__ = [
     "metric_direction",
     "mfu",
     "observe",
+    "parse_series",
     "plan_hit_rate",
+    "probe_decode_plans",
     "record_bench_rows",
+    "record_findings",
     "record_gemm",
+    "record_gemm_sample",
+    "render_text",
     "request_scope",
     "request_timeline",
     "reset",
     "roofline_seconds",
+    "sample_call",
+    "sampling",
     "set_gauge",
     "snapshot_doc",
     "span",
     "trace_rids",
     "validate_chrome_trace",
+    "validate_doctor_report",
     "validate_postmortem",
     "validate_request_timeline",
     "validate_snapshot",

@@ -19,12 +19,25 @@ Ledger subcommands (DESIGN.md §12)::
 ``compare`` diffs each (bench, variant, chip, dtype) key's latest entry
 against the previous one and exits 1 when any metric regresses past the
 threshold -- the CI ``ledger-gate`` job.
+
+Doctor (DESIGN.md §15)::
+
+    python -m repro.obs doctor METRICS_DIR [--json] [--out PATH]
+                               [--drift-threshold F] [--tune-cache PATH]
+                               [--ledger PATH]
+
+Ranked diagnosis of a serve run from its ``--metrics-dir`` artefacts:
+measured per-phase breakdown, measured-vs-modeled residuals, stale tuned
+plans (drift watchdog), SLO violations attributed to the causing phase.
+Exit 0 healthy, 1 when stale plans are found, 2 on unreadable inputs --
+the CI ``doctor-smoke`` gate.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 from repro.obs.metrics import validate_snapshot
@@ -42,6 +55,10 @@ def validate_file(path: str) -> list[str]:
         return validate_chrome_trace(doc)
     if isinstance(doc, dict) and doc.get("kind") == "postmortem":
         return validate_postmortem(doc)
+    if isinstance(doc, dict) and doc.get("kind") == "doctor":
+        from repro.obs.doctor import validate_doctor_report
+
+        return validate_doctor_report(doc)
     return validate_snapshot(doc)
 
 
@@ -128,12 +145,70 @@ def ledger_main(argv: list[str]) -> int:
     return 1 if any(not r.ok for r in results) else 0
 
 
+def doctor_main(argv: list[str]) -> int:
+    from repro.obs import doctor as _doctor
+    from repro.obs import drift as _drift
+
+    ap = argparse.ArgumentParser(prog="python -m repro.obs doctor")
+    ap.add_argument("metrics_dir", help="directory a serve run wrote with --metrics-dir")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="print the report document instead of text")
+    ap.add_argument("--out", default=None,
+                    help="also write the report document to this path")
+    ap.add_argument("--drift-threshold", type=float,
+                    default=_drift.DEFAULT_DRIFT_THRESHOLD,
+                    help="relative stale-plan tolerance (default %(default)s: "
+                    "flag plans >1.5x off their sampled time)")
+    ap.add_argument("--tune-cache", default=None,
+                    help="tune cache path (default: REPRO_TUNE_CACHE / the "
+                    "default cache)")
+    ap.add_argument("--ledger", default=None,
+                    help="record stale-plan findings into this regression "
+                    "ledger (default: $REPRO_LEDGER when set)")
+    args = ap.parse_args(argv)
+
+    cache = None
+    if args.tune_cache is not None:
+        from repro.tune.cache import PlanCache
+
+        cache = PlanCache(args.tune_cache)
+    try:
+        report = _doctor.build_report(
+            args.metrics_dir, threshold=args.drift_threshold, tune_cache=cache
+        )
+    except (OSError, ValueError) as e:
+        print(f"doctor: cannot read {args.metrics_dir}: {e}", file=sys.stderr)
+        return 2
+    errs = _doctor.validate_doctor_report(report)
+    if errs:  # pragma: no cover - internal invariant
+        for e in errs:
+            print(f"doctor: invalid report: {e}", file=sys.stderr)
+        return 2
+
+    ledger_path = args.ledger or os.environ.get("REPRO_LEDGER")
+    if ledger_path and report["stale_plans"]:
+        from repro.obs.drift import DriftFinding
+        from repro.obs.ledger import Ledger
+
+        findings = [DriftFinding(**f) for f in report["stale_plans"]]
+        _drift.record_findings(findings, ledger=Ledger(ledger_path))
+
+    doc = json.dumps(report, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(doc + "\n")
+    print(doc if args.as_json else _doctor.render_text(report))
+    return 1 if report["stale_plans"] else 0
+
+
 def main(argv: list[str]) -> int:
     if not argv:
         print(__doc__)
         return 2
     if argv[0] == "ledger":
         return ledger_main(argv[1:])
+    if argv[0] == "doctor":
+        return doctor_main(argv[1:])
     return _validate_main(argv)
 
 

@@ -43,6 +43,7 @@ import contextlib
 import json
 import math
 import os
+import re
 import tempfile
 import threading
 import time
@@ -97,6 +98,25 @@ def _format_series(name: str, key: tuple[tuple[str, str], ...]) -> str:
         return name
     inner = ",".join(f'{k}="{v}"' for k, v in key)
     return f"{name}{{{inner}}}"
+
+
+_LABEL_RE = re.compile(r'(\w+)="([^"]*)"')
+
+
+def parse_series(series: str) -> tuple[str, dict[str, str]]:
+    """Inverse of ``_format_series``: ``'a.b{x="1",y="z"}'`` ->
+    ``("a.b", {"x": "1", "y": "z"})``.
+
+    Snapshot documents key counters/gauges/histograms by formatted series
+    name; offline readers (the drift watchdog, ``obs doctor``) use this to
+    recover the label set.  Label values never contain a double quote in
+    our emitters (``_format_series`` does not escape), so the simple regex
+    split is exact for every series this package writes.
+    """
+    if "{" not in series:
+        return series, {}
+    name, _, rest = series.partition("{")
+    return name, dict(_LABEL_RE.findall(rest.rstrip("}")))
 
 
 def _escape_label_value(v: str) -> str:

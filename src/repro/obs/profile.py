@@ -1,0 +1,222 @@
+"""Sampled *measured* device timing — the f_max column next to the model.
+
+The telemetry layers of PRs 6-7 attribute wall time against modeled
+roofline seconds only: ``collective.overlap_ratio`` is computed from the
+chip model, ``tp.ring_hop`` spans carry ``modeled_s``, and a tune-cache
+entry measured once is trusted forever.  The paper's methodology is the
+opposite — Table I holds the analytical model against *measured* f_max and
+throughput — so this module adds the measured column: rate-limited
+``block_until_ready`` timing windows around kernel, collective, and KV-pool
+dispatch, recorded as ordinary histograms/counters in the default registry.
+
+Design constraints:
+
+* **Off by default, cheap when on.**  The profiler is inert unless both
+  ``REPRO_OBS`` telemetry is enabled *and* a sampling rate > 0 is set
+  (``--profile-sample-rate`` / ``REPRO_PROFILE_RATE``).  A sampled window
+  costs one ``jax.block_until_ready`` + two clock reads; the obs benchmark
+  budget (<3% enabled-vs-disabled) is asserted *with sampling on*.
+* **Deterministic sampling.**  Sampling uses a per-stream Bresenham
+  accumulator (``acc += rate; fire when acc >= 1``) instead of an RNG, so
+  a run at rate r samples exactly ``floor(r * calls)`` (±1) windows and
+  repeat runs profile the same calls — no seed plumbing, reproducible
+  overhead.
+* **Attribution caveat.**  ``block_until_ready`` drains every async
+  predecessor of the sampled value, so a window charges pending upstream
+  work to the sampled stream.  On the serving path this is sound: the
+  scheduler blocks at the end of every tick, so each sampled pool/kernel
+  window starts with an empty device queue.  Do not wrap values deep
+  inside an un-synchronized pipeline and expect per-op resolution.
+* **Trace-time safety.**  Callers must not sample under ``jax.jit`` —
+  a timing window around a traced call measures tracing, and host clocks
+  are jit-impure (the ``repro.check`` ``jit-impurity`` rule).  Dispatch
+  sites guard with ``isinstance(x, jax.core.Tracer)`` and skip sampling
+  during trace.
+
+Series written (all in the default registry unless a registry is passed):
+
+    {stream}.calls{labels}       every call while the profiler is active
+    {stream}.sampled{labels}     calls that got a timing window
+    {stream}.sampled_us{labels}  total measured µs across sampled calls
+    {stream}_us{labels}          histogram of per-call measured µs
+
+Extrapolated stream total ≈ ``sampled_us * calls / sampled`` — `obs
+doctor` uses exactly that estimator for the KV gather/scatter breakdown.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.obs import metrics as _metrics
+
+__all__ = [
+    "Profiler",
+    "get_profiler",
+    "configure",
+    "sampling",
+    "sample_call",
+    "record_gemm_sample",
+]
+
+
+def _env_rate() -> float:
+    raw = os.environ.get("REPRO_PROFILE_RATE", "").strip()
+    if not raw:
+        return 0.0
+    try:
+        return max(0.0, min(1.0, float(raw)))
+    except ValueError:
+        return 0.0
+
+
+class Profiler:
+    """Rate-limited measured-timing sampler.
+
+    One process-wide instance (``get_profiler()``) serves every dispatch
+    site; per-stream Bresenham accumulators live behind a lock so
+    concurrent callers cannot double-fire a sampling credit.
+    """
+
+    def __init__(self, sample_rate: float = 0.0) -> None:
+        self.sample_rate = float(sample_rate)
+        self._acc: dict[Any, float] = {}
+        self._lock = threading.Lock()
+
+    # -- gating --------------------------------------------------------------
+
+    def active(self) -> bool:
+        """True when sampling can fire: rate > 0 and telemetry enabled."""
+        return self.sample_rate > 0.0 and _metrics.enabled()
+
+    def configure(self, sample_rate: float) -> None:
+        self.sample_rate = max(0.0, min(1.0, float(sample_rate)))
+
+    def reset(self) -> None:
+        """Restore the env-derived rate and clear sampling accumulators."""
+        with self._lock:
+            self._acc.clear()
+        self.sample_rate = _env_rate()
+
+    def should_sample(self, stream: Any) -> bool:
+        """Deterministic Bresenham draw for one call on ``stream``."""
+        if not self.active():
+            return False
+        with self._lock:
+            acc = self._acc.get(stream, 0.0) + self.sample_rate
+            if acc >= 1.0:
+                self._acc[stream] = acc - 1.0
+                return True
+            self._acc[stream] = acc
+            return False
+
+    # -- timing windows ------------------------------------------------------
+
+    def timed(
+        self, stream: str, thunk: Callable[[], Any], **labels
+    ) -> tuple[Any, float | None]:
+        """Run ``thunk``; on a sampled call, return (result, wall seconds).
+
+        The window covers the call *and* ``jax.block_until_ready`` on its
+        result, i.e. dispatch-to-retire.  Unsampled calls return
+        ``(result, None)`` and cost one dict lookup.
+        """
+        if not self.should_sample((stream, _metrics._label_key(labels))):
+            return thunk(), None
+        t0 = time.perf_counter()
+        out = thunk()
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
+
+    def sample_call(
+        self,
+        stream: str,
+        thunk: Callable[[], Any],
+        *,
+        registry: _metrics.Registry | None = None,
+        **labels,
+    ) -> Any:
+        """``timed`` plus the standard series write-out (see module doc)."""
+        if not (_metrics.enabled() and self.sample_rate > 0.0):
+            return thunk()
+        reg = registry if registry is not None else _metrics.get_registry()
+        reg.inc(f"{stream}.calls", 1, **labels)
+        out, wall = self.timed(stream, thunk, **labels)
+        if wall is not None:
+            reg.inc(f"{stream}.sampled", 1, **labels)
+            reg.inc(f"{stream}.sampled_us", wall * 1e6, **labels)
+            reg.observe(f"{stream}_us", wall * 1e6, **labels)
+        return out
+
+
+_profiler = Profiler(_env_rate())
+
+
+def get_profiler() -> Profiler:
+    return _profiler
+
+
+def configure(sample_rate: float) -> None:
+    """Set the process-wide sampling rate (clamped to [0, 1])."""
+    _profiler.configure(sample_rate)
+
+
+@contextlib.contextmanager
+def sampling(sample_rate: float):
+    """Temporarily set the sampling rate (benchmarks, tests)."""
+    prev = _profiler.sample_rate
+    _profiler.configure(sample_rate)
+    try:
+        yield _profiler
+    finally:
+        _profiler.sample_rate = prev
+
+
+def sample_call(stream: str, thunk: Callable[[], Any], **labels) -> Any:
+    """Module-level convenience over ``get_profiler().sample_call``.
+
+    Inactive fast path is a rate check + ``enabled()`` — dispatch sites can
+    call this unconditionally.
+    """
+    if not _profiler.active():
+        return thunk()
+    return _profiler.sample_call(stream, thunk, **labels)
+
+
+def record_gemm_sample(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    backend: str,
+    dtype: Any,
+    wall_s: float,
+    method: str = "eager-wall",
+    registry: _metrics.Registry | None = None,
+) -> None:
+    """Record one measured GEMM timing into ``profile.gemm_us``.
+
+    ``method`` carries provenance exactly like the tune cache does:
+    ``eager-wall`` windows (sampled around an eager ``core.ops.matmul``
+    dispatch) are only comparable to each other, while drift-probe samples
+    carry the ``tune.measure`` method name so the watchdog compares
+    like-for-like against a cached plan's ``measured_us``.
+    """
+    if not _metrics.enabled():
+        return
+    reg = registry if registry is not None else _metrics.get_registry()
+    labels = {
+        "backend": backend,
+        "dtype": str(dtype),
+        "problem": f"{int(m)}x{int(n)}x{int(k)}",
+        "method": method,
+    }
+    reg.inc("profile.gemm.sampled", 1, **labels)
+    reg.inc("profile.gemm.sampled_us", wall_s * 1e6, **labels)
+    reg.observe("profile.gemm_us", wall_s * 1e6, **labels)

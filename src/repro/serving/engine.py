@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.models.registry import Model
 from repro.obs import attribution as _obs
+from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _obs_trace
 from repro.serving.kvpool import clear_slots
 
@@ -201,8 +202,14 @@ class ServeEngine:
         # GEMM-work accounting (DESIGN.md §11).  core.ops.matmul records at
         # *trace* time, so each totals object accumulates exactly one traced
         # step's FLOPs + roofline prediction: the first call through a jitted
-        # function populates it, cached executions add nothing.  Separate
-        # objects per call path because each path is its own compile:
+        # function populates it, cached executions add nothing.  The same
+        # trace-time rule applies to the process-wide ``gemm.*`` counters --
+        # ``gemm.calls`` counts *compiles*, not executions.  The execution
+        # count lives in the ``engine.steps{phase}`` counter each public
+        # step method increments (one per call, warmup included), so an MFU
+        # denominator is auditable from a snapshot alone:
+        # total FLOPs(phase) = totals.flops * engine.steps{phase}.
+        # Separate totals objects per call path, each path its own compile:
         #   decode_totals    vector-pos decode_slots (one continuous tick)
         #   generate_totals  synchronized scalar-pos decode step
         #   prefill_totals   monolithic prefills (aggregate across shapes)
@@ -257,6 +264,7 @@ class ServeEngine:
         """Prime the resident cache from a synchronized prompt batch; returns
         the first sampled continuation token (prefill emits last-position
         logits)."""
+        _obs_metrics.inc("engine.steps", phase="prefill")
         with self._mesh_scope(), _obs.collecting(self.prefill_totals):
             logits, self.cache = self._prefill(self.params, batch)
         self.pos = self.prompt_positions(batch)
@@ -269,6 +277,7 @@ class ServeEngine:
             raise RuntimeError("prefill() first")
         outs = []
         tok = tokens
+        _obs_metrics.inc("engine.steps", n_steps, phase="decode_sync")
         with self._mesh_scope(), _obs.collecting(self.generate_totals):
             for _ in range(n_steps):
                 logits, self.cache = self._decode(
@@ -311,6 +320,7 @@ class ServeEngine:
         (1, 1[, ncb]), primed batch-1 cache at this engine's max_len) for the
         KV pool to scatter into the assigned slot.
         """
+        _obs_metrics.inc("engine.steps", phase="prefill_request")
         with self._mesh_scope(), _obs.collecting(self.prefill_totals), \
                 _obs_trace.span(
                     "engine.prefill_request",
@@ -363,6 +373,7 @@ class ServeEngine:
         totals = self._chunk_totals.setdefault(
             (length, wrapped), _obs.GemmTotals()
         )
+        _obs_metrics.inc("engine.steps", phase="prefill_chunk")
         with self._mesh_scope(), _obs.collecting(totals), \
                 _obs_trace.span(
                     "engine.prefill_chunk",
@@ -388,6 +399,7 @@ class ServeEngine:
         Returns (sampled tokens (B, 1[, ncb]), new cache).  The cache is
         donated, matching the synchronized path's allocation-free decode.
         """
+        _obs_metrics.inc("engine.steps", phase="decode")
         with self._mesh_scope(), _obs.collecting(self.decode_totals), \
                 _obs_trace.span(
                     "engine.decode_slots", cat="engine", batch=tokens.shape[0]

@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import profile as _obs_profile
+
 # ---------------------------------------------------------------------------
 # Quantized pool storage (kv8, DESIGN.md §10).
 #
@@ -204,13 +206,22 @@ class KVPool:
     @property
     def cache(self) -> Any:
         if self.quantize_kv:
-            return dequantize_kv(self._qcache, str(self.dtype))
+            # Sampled kv8 dequant cost (DESIGN.md §15); the fp path below
+            # returns a reference and is not worth a timing window.
+            return _obs_profile.sample_call(
+                "kv.gather",
+                lambda: dequantize_kv(self._qcache, str(self.dtype)),
+                pool="stripe", path="cache",
+            )
         return self._cache
 
     @cache.setter
     def cache(self, new: Any) -> None:
         if self.quantize_kv:
-            self._qcache = quantize_kv(new)
+            self._qcache = _obs_profile.sample_call(
+                "kv.scatter", lambda: quantize_kv(new),
+                pool="stripe", path="cache",
+            )
         else:
             self._cache = new
 
@@ -326,7 +337,11 @@ class KVPool:
         chunk advances before ``write_slot`` puts it back."""
         if not 0 <= slot < self.n_slots:
             raise ValueError(f"gather of invalid slot {slot}")
-        return _gather_slot(self.cache, jnp.int32(slot))
+        return _obs_profile.sample_call(
+            "kv.gather",
+            lambda: _gather_slot(self.cache, jnp.int32(slot)),
+            pool="stripe", path="slot",
+        )
 
     def write_slot(self, slot: int, cache_one: Any, next_pos: int | None) -> None:
         """Scatter a batch-1 cache back into ``slot``.
@@ -343,7 +358,14 @@ class KVPool:
         if any(s != 1 for s in jax.tree.leaves(shapes)):
             raise ValueError("write_slot expects a batch-1 cache")
         next_pos = check_next_pos(next_pos)
-        self.cache = _scatter_slot(self.cache, cache_one, jnp.int32(slot))
+
+        def _scatter() -> Any:
+            self.cache = _scatter_slot(self.cache, cache_one, jnp.int32(slot))
+            return self._qcache if self.quantize_kv else self._cache
+
+        _obs_profile.sample_call(
+            "kv.scatter", _scatter, pool="stripe", path="slot"
+        )
         if next_pos is not None:
             self.positions[slot] = next_pos
 

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import profile as _obs_profile
 from repro.serving.kvpool import check_next_pos, dequantize_kv, quantize_kv
 
 
@@ -341,11 +342,24 @@ class PagedKVPool:
 
     @property
     def cache(self) -> Any:
-        return _gather_pages(self.phys, self._idx(), self.seq_len)
+        # The decode-path page gather is exactly the overhead ROADMAP
+        # names (`paged tok/s < stripe tok/s`); sampled timing makes it a
+        # measured, ledger-tracked number (DESIGN.md §15).
+        return _obs_profile.sample_call(
+            "kv.gather",
+            lambda: _gather_pages(self.phys, self._idx(), self.seq_len),
+            pool="paged", path="cache",
+        )
 
     @cache.setter
     def cache(self, new: Any) -> None:
-        self.phys = _scatter_pages(self.phys, new, self._idx())
+        def _scatter() -> Any:
+            self.phys = _scatter_pages(self.phys, new, self._idx())
+            return self._qphys if self.quantize_kv else self._fphys
+
+        _obs_profile.sample_call(
+            "kv.scatter", _scatter, pool="paged", path="cache"
+        )
 
     # -- bookkeeping ---------------------------------------------------------
 
@@ -507,8 +521,12 @@ class PagedKVPool:
         included -- this is what a suffix prefill chunk attends to)."""
         if not 0 <= slot < self.n_slots:
             raise ValueError(f"gather of invalid slot {slot}")
-        return _gather_pages(
-            self.phys, self._idx(np.asarray([slot])), self.seq_len
+        return _obs_profile.sample_call(
+            "kv.gather",
+            lambda: _gather_pages(
+                self.phys, self._idx(np.asarray([slot])), self.seq_len
+            ),
+            pool="paged", path="slot",
         )
 
     def write_slot(self, slot: int, cache_one: Any, next_pos: int | None) -> None:
@@ -520,8 +538,15 @@ class PagedKVPool:
         if any(s != 1 for s in jax.tree.leaves(shapes)):
             raise ValueError("write_slot expects a batch-1 cache")
         next_pos = check_next_pos(next_pos)
-        self.phys = _scatter_pages(
-            self.phys, cache_one, self._idx(np.asarray([slot]))
+
+        def _scatter() -> Any:
+            self.phys = _scatter_pages(
+                self.phys, cache_one, self._idx(np.asarray([slot]))
+            )
+            return self._qphys if self.quantize_kv else self._fphys
+
+        _obs_profile.sample_call(
+            "kv.scatter", _scatter, pool="paged", path="slot"
         )
         if next_pos is not None:
             self.positions[slot] = next_pos

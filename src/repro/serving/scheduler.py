@@ -149,6 +149,11 @@ class SchedulerStats:
         self._prefill_s = r.counter("sched.prefill_s")
         self._decode_s = r.counter("sched.decode_s")
         self._tick_s = r.counter("sched.tick_s")
+        # end-to-end accounting for the measured phase breakdown (obs
+        # doctor, DESIGN.md §15): run() wall clock + on_tick callback time,
+        # so tick_s + callback_s can be held against the whole run
+        self._callback_s = r.counter("sched.callback_s")
+        self._run_wall = r.gauge("sched.run_wall_s")
         self._prefill_chunks = r.counter("sched.prefill_chunks")
         self._admitted = r.counter("sched.admitted")
         self._evicted = r.counter("sched.evicted")
@@ -181,6 +186,12 @@ class SchedulerStats:
 
     def count_idle_tick(self) -> None:
         self._idle_ticks.inc()
+
+    def count_callback(self, wall_s: float) -> None:
+        self._callback_s.inc(wall_s)
+
+    def set_run_wall(self, wall_s: float) -> None:
+        self._run_wall.set(wall_s)
 
     def count_admitted(self, queue_wait_s: float | None = None) -> None:
         self._admitted.inc()
@@ -326,6 +337,8 @@ class SchedulerStats:
             "prefill_s": round(self.prefill_s, 4),
             "decode_s": round(self.decode_s, 4),
             "sched_overhead_s": round(overhead, 4),
+            "callback_s": round(self._callback_s.value, 4),
+            "run_wall_s": round(self._run_wall.value, 4),
             "prefill_chunks": self.prefill_chunks,
             "tok_per_s": round(self.tokens_out / wall, 2) if wall > 0 else 0.0,
             "p50_step_ms": round(p50 * 1e3, 3),
@@ -1095,5 +1108,10 @@ class ContinuousScheduler:
                 raise RuntimeError(f"scheduler did not drain in {limit} ticks")
             self.step()
             if on_tick is not None:
+                t_cb = time.perf_counter()
                 on_tick(self)
+                self.stats.count_callback(time.perf_counter() - t_cb)
+        # Measured wall clock of the drained run (warmup excluded): the
+        # denominator obs doctor holds tick_s + callback_s against.
+        self.stats.set_run_wall(time.perf_counter() - self._t0)
         return {r.rid: r.tokens() for r in done}

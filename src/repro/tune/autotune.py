@@ -13,6 +13,7 @@ loop deterministically without hardware or wall clocks.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
 from repro.core import dse, hw
@@ -157,6 +158,7 @@ def autotune(
         best_us=best_ms.best_us,
         method=best_ms.method,
         repeats=best_ms.repeats,
+        tuned_at=time.time(),
     )
     cache.store(key, winner)
     return TuneResult(

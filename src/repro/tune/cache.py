@@ -28,7 +28,10 @@ On-disk JSON schema (version 2)::
           "best_us": float,                  // best-of-repeats (ranking key)
           "method": str,                     // "device-wall" | "interpret-wall"
                                              // | "xla-proxy" | "stub"
-          "repeats": int                     // timing repeats behind mean/best
+          "repeats": int,                    // timing repeats behind mean/best
+          "tuned_at": float                  // optional: unix seconds of the
+                                             // measurement (0.0 = unknown);
+                                             // drift-watchdog staleness aid
         }, ...
       }
     }
@@ -107,7 +110,16 @@ class CacheKey:
 
 @dataclasses.dataclass(frozen=True)
 class TunedPlan:
-    """A cache entry: the winning geometry plus its measurement provenance."""
+    """A cache entry: the winning geometry plus its measurement provenance.
+
+    ``tuned_at`` (unix seconds; 0.0 = unknown, pre-existing entries) is
+    staleness metadata for the drift watchdog (``repro.obs.drift``): a
+    plan's ``mean_us`` was true when the autotuner measured it, and the
+    watchdog reports the measurement's age alongside a drift finding.  It
+    is excluded from equality -- two plans with the same geometry and
+    measurement are the same plan regardless of when they were taken --
+    and optional in the JSON, so v2 cache files round-trip unchanged.
+    """
 
     bm: int
     bn: int
@@ -116,6 +128,7 @@ class TunedPlan:
     best_us: float
     method: str  # "device-wall" | "interpret-wall" | "xla-proxy" | "stub"
     repeats: int = 1
+    tuned_at: float = dataclasses.field(default=0.0, compare=False)
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -130,6 +143,7 @@ class TunedPlan:
             best_us=float(d["best_us"]),
             method=str(d["method"]),
             repeats=int(d.get("repeats", 1)),
+            tuned_at=float(d.get("tuned_at", 0.0)),
         )
 
 

@@ -194,6 +194,25 @@ def test_tracer_ring_buffer_drops_oldest():
     assert t.export_chrome()["otherData"]["dropped_events"] == 3
 
 
+def test_ring_buffer_drop_oldest_across_open_span():
+    """Satellite (DESIGN.md §15): overflowing the ring while a span is still
+    open must not corrupt the export -- spans push on completion, so the
+    open span survives the overflow and the drop count stays exact."""
+    t = obs_trace.Tracer(capacity=8)
+    with t.span("outer"):
+        for i in range(20):
+            t.instant(f"e{i}")
+    # 21 events pushed (20 instants + the span on close), capacity 8
+    events = t.events()
+    assert len(events) == 8
+    names = [e["name"] for e in events]
+    assert names == [f"e{i}" for i in range(13, 20)] + ["outer"]
+    assert events[-1]["ph"] == "X" and events[-1]["dur"] >= 0
+    doc = t.export_chrome()
+    assert obs_trace.validate_chrome_trace(doc) == []
+    assert doc["otherData"]["dropped_events"] == 21 - 8
+
+
 def test_request_scope_tags_spans_and_instants():
     t = obs_trace.Tracer()
     with obs_trace.request_scope(7):
@@ -381,9 +400,17 @@ def test_collective_record_dispatch():
     assert reg.counter_value("collective.hop_bytes",
                              mode="allgather") == 3 * 65536
     snap = reg.snapshot()
-    assert snap["gauges"]['collective.overlap_ratio{mode="allgather"}'] > 0
+    # The modeled gauge is explicitly tagged so it can never be confused
+    # with the sampled kind="measured" series (PR 10, satellite 1) -- and
+    # the label set round-trips through parse_series.
+    series = 'collective.overlap_ratio{kind="modeled",mode="allgather"}'
+    assert snap["gauges"][series] > 0
+    name, labels = metrics.parse_series(series)
+    assert name == "collective.overlap_ratio"
+    assert labels == {"kind": "modeled", "mode": "allgather"}
     hops = [e for e in obs.get_tracer().events() if e["name"] == "tp.ring_hop"]
     assert len(hops) == 3 and hops[0]["args"]["bytes"] == 65536
+    assert hops[0]["args"]["modeled_s"] > 0
     # unoverlapped dispatch records the call but no hops
     cm._record_dispatch(
         "reducescatter", 4, 256, 256, 256, jnp.float32, False, 1024
@@ -471,6 +498,40 @@ def test_serve_trace_reconstructs_every_request_timeline():
             and "rid" in e.get("args", {})
         }
         assert {t["rid"] for t in trace} <= tagged
+
+
+def test_engine_steps_count_executions_not_compiles():
+    """Satellite (DESIGN.md §15): ``gemm.*`` counters record at *trace*
+    time -- one bump per compile, not per step -- while ``engine.steps``
+    counts executions.  Re-running the same trace through a warm engine
+    moves the step counters and leaves the gemm counters alone; total FLOPs
+    for a phase is ``totals.flops * engine.steps{phase}``."""
+    from repro.serving import ContinuousScheduler, requests_from_trace
+
+    model, params, engine, trace = _serve_setup()
+
+    def gemm_calls():
+        return sum(
+            v
+            for k, v in metrics.get_registry().snapshot()["counters"].items()
+            if metrics.parse_series(k)[0] == "gemm.calls"
+        )
+
+    reg = metrics.get_registry()
+    ContinuousScheduler(engine).run(requests_from_trace(trace))
+    steps0 = reg.counter_value("engine.steps", phase="decode")
+    prefills0 = reg.counter_value("engine.steps", phase="prefill_request")
+    assert steps0 > 0 and prefills0 >= len(trace)
+    calls0 = gemm_calls()
+    assert calls0 > 0
+    ContinuousScheduler(engine).run(requests_from_trace(trace))
+    # executions doubled-ish; trace-time gemm records did not move at all
+    assert reg.counter_value("engine.steps", phase="decode") > steps0
+    assert (
+        reg.counter_value("engine.steps", phase="prefill_request")
+        >= prefills0 + len(trace)
+    )
+    assert gemm_calls() == calls0
 
 
 def test_chunked_prefill_does_not_pollute_itl_histograms():
